@@ -1,0 +1,3 @@
+"""Shared benchmark setup (re-exported from repro.launch.world)."""
+from repro.launch.world import (build_world, eval_batches,  # noqa: F401
+                                percentile_stats, timed)

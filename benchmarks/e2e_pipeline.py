@@ -1,0 +1,47 @@
+"""End-to-end multi-stage QA pipeline throughput (the paper's deployment
+context): BM25 retrieval -> (optional cutoff) -> CNN rerank, per backend."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import build_world, percentile_stats
+from repro.core import backends as BK
+from repro.core import pipeline as PL
+
+
+def run(n_queries: int = 40, world=None) -> List[Dict]:
+    cfg, params, corpus, tok, index, _ = world or build_world()
+    queries = (corpus.questions * 3)[:n_queries]
+    rows = []
+    for backend in ("jit", "aot", "numpy"):
+        for cutoff in (False, True):
+            scorer = BK.make_scorer(backend, params, cfg,
+                                    buckets=(64, 256, 1024))
+            stages = [PL.RetrievalStage(index, corpus.documents, tok, h=10)]
+            if cutoff:
+                stages.append(PL.CutoffStage(margin=2.0))
+            stages.append(PL.RerankStage(scorer, tok, corpus.idf,
+                                         cfg.max_len, k=5))
+            ranker = PL.MultiStageRanker(stages)
+            ranker.run(queries[0])  # warm
+            lats = []
+            t0 = time.perf_counter()
+            for q in queries:
+                t1 = time.perf_counter()
+                ranker.run(q)
+                lats.append(time.perf_counter() - t1)
+            dt = time.perf_counter() - t0
+            p50, p99 = percentile_stats(lats)
+            tag = f"e2e/{backend}" + ("+cutoff" if cutoff else "")
+            rows.append({"name": tag,
+                         "us_per_call": 1e6 * dt / len(queries),
+                         "derived": (f"qps={len(queries) / dt:.1f} "
+                                     f"p50_ms={p50 * 1e3:.2f} "
+                                     f"p99_ms={p99 * 1e3:.2f}")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

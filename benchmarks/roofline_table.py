@@ -1,0 +1,61 @@
+"""Render the roofline table from dry-run artifacts (artifacts/dryrun/)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = ART) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render_markdown(recs: List[Dict], mesh: str = "pod16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| step_ms | useful% | roofline% | peak GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: sub-quadratic-rule | — | — | — | — |")
+            continue
+        if not r.get("ok") or r.get("mesh") != mesh:
+            continue
+        ro = r["roofline"]
+        peak = r["memory"]["peak_estimate_bytes"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3g} | "
+            f"{ro['memory_s']:.3g} | {ro['collective_s']:.3g} | "
+            f"{ro['bottleneck']} | {ro['step_s'] * 1e3:.2f} | "
+            f"{ro['useful_ratio'] * 100:.0f} | "
+            f"{ro['roofline_frac'] * 100:.1f} | {peak:.2f} |")
+    return "\n".join(lines)
+
+
+def run(art_dir: str = ART) -> List[Dict]:
+    recs = load_records(art_dir)
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    rows = []
+    for r in ok:
+        ro = r["roofline"]
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "us_per_call": ro["step_s"] * 1e6,
+            "derived": (f"bottleneck={ro['bottleneck']} "
+                        f"frac={ro['roofline_frac'] * 100:.1f}%"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(render_markdown(recs))

@@ -1,0 +1,45 @@
+"""Benchmark orchestrator. One function per paper table; prints
+``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables, quick
+  PYTHONPATH=src python -m benchmarks.run --table 1  # just Table 1
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", default="all",
+                    choices=["all", "1", "2", "e2e", "roofline"])
+    ap.add_argument("--naive", action="store_true",
+                    help="include the naive per-filter conv condition")
+    args = ap.parse_args()
+
+    from benchmarks import (e2e_pipeline, roofline_table, table1_feedforward,
+                            table2_service)
+    from benchmarks.common import build_world
+
+    rows = []
+    world = None
+    if args.table in ("all", "1", "2", "e2e"):
+        world = build_world()
+    if args.table in ("all", "1"):
+        rows += table1_feedforward.run(batch=1, world=world, naive=args.naive)
+        rows += table1_feedforward.run(batch=64, world=world)
+        rows += table1_feedforward.paper_size_contrast()
+    if args.table in ("all", "2"):
+        rows += table2_service.run(world=world)
+    if args.table in ("all", "e2e"):
+        rows += e2e_pipeline.run(world=world)
+    if args.table in ("all", "roofline"):
+        rows += roofline_table.run()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Table 1: feedforward throughput (QPS) per integration backend,
+WITHOUT the service wrapper. The paper's method: iterate the dev/test QA
+pairs, score each, divide count by elapsed time; single calling thread.
+
+Backends = the paper's three strategies mapped to JAX/TPU (DESIGN.md §2)
+plus the Pallas-fused path. ``--naive`` adds the loop-over-filters condition
+(the paper's two-orders-of-magnitude ND4J observation).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import build_world, eval_batches
+from repro.core import backends as BK
+from repro.core import export as E
+from repro.core import numpy_eval as NE
+
+BACKENDS = ("eager", "jit", "aot", "numpy", "pallas", "artifact")
+
+
+def run(batch: int = 1, n_pairs: int = 300, naive: bool = False,
+        world=None) -> List[Dict]:
+    cfg, params, corpus, tok, index, pairs = world or build_world()
+    pairs = (pairs * ((n_pairs // len(pairs)) + 1))[:n_pairs]
+    batches = eval_batches(corpus, tok, cfg, pairs, batch)
+    rows = []
+    for backend in BACKENDS:
+        scorer = BK.make_scorer(backend, params, cfg,
+                                buckets=(batch, 64, 256))
+        scorer(batches[0]["q_tok"], batches[0]["a_tok"], batches[0]["feats"])
+        t0 = time.perf_counter()
+        n = 0
+        for b in batches:
+            scorer(b["q_tok"], b["a_tok"], b["feats"])
+            n += batch
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"table1/{backend}/b{batch}",
+                     "us_per_call": 1e6 * dt / max(n, 1),
+                     "derived": f"qps={n / dt:.1f}"})
+    if naive:
+        blob = E.dumps(params, meta={"filter_width": cfg.filter_width})
+        ev = NE.NumpySMCNN.from_bytes(blob)
+        b = batches[0]
+        t0 = time.perf_counter()
+        ev.get_score(b["q_tok"][:4], b["a_tok"][:4], b["feats"][:4], naive=True)
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"table1/numpy-naive/b{batch}",
+                     "us_per_call": 1e6 * dt / 4,
+                     "derived": f"qps={4 / dt:.1f}"})
+    return rows
+
+
+def paper_size_contrast(n_pairs: int = 8) -> List[Dict]:
+    """The §4.1 claim at the paper's REAL model dimensions (100 filters,
+    width 5, d=50, seq 64): naive loop-over-filters vs im2col-GEMM in the
+    same NumPy runtime. The paper reports two orders of magnitude."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import sm_cnn
+    cfg = get_config("sm-cnn")          # FULL config
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    blob = E.dumps(params, meta={"filter_width": cfg.filter_width})
+    ev = NE.NumpySMCNN.from_bytes(blob)
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, cfg.vocab_size, (n_pairs, cfg.max_len)).astype(np.int32)
+    a = rng.integers(0, cfg.vocab_size, (n_pairs, cfg.max_len)).astype(np.int32)
+    f = rng.random((n_pairs, 4), np.float32)
+    rows = []
+    for tag, naive in (("gemm", False), ("naive", True)):
+        ev.get_score(q[:1], a[:1], f[:1], naive=naive)  # warm
+        t0 = time.perf_counter()
+        ev.get_score(q, a, f, naive=naive)
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"table1/paper-size-{tag}",
+                     "us_per_call": 1e6 * dt / n_pairs,
+                     "derived": f"qps={n_pairs / dt:.1f}"})
+    ratio = rows[1]["us_per_call"] / rows[0]["us_per_call"]
+    rows.append({"name": "table1/paper-size-naive-vs-gemm",
+                 "us_per_call": 0.0, "derived": f"slowdown={ratio:.0f}x"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(naive=True) + paper_size_contrast():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

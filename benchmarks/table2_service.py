@@ -1,0 +1,85 @@
+"""Paper Table 2: end-to-end RPC service performance — throughput (QPS) and
+p50/p99 latency, single-threaded client, TSimpleServer-style server, both on
+this host (exactly the paper's setup). Overhead vs Table 1 is the
+serialization+transport cost of the service boundary.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import build_world, percentile_stats
+from repro.core import backends as BK
+from repro.core import service as SV
+
+BACKENDS = ("jit", "aot", "numpy")
+
+
+def run(n_requests: int = 300, world=None) -> List[Dict]:
+    cfg, params, corpus, tok, index, pairs = world or build_world()
+    reqs = []
+    for qi, di, si, _ in (pairs * 4)[:n_requests]:
+        reqs.append((corpus.questions[qi], corpus.documents[di][si]))
+    rows = _engine_rows(cfg, params, corpus, tok, reqs)
+    for backend in BACKENDS:
+        scorer = BK.make_scorer(backend, params, cfg, buckets=(1, 8, 64))
+        handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
+                                              cfg.max_len)
+        srv = SV.SimpleServer(handler).start_background()
+        cl = SV.Client(srv.address)
+        cl.get_score(*reqs[0])  # warm
+        lats = []
+        t0 = time.perf_counter()
+        for q, a in reqs:
+            t1 = time.perf_counter()
+            cl.get_score(q, a)
+            lats.append(time.perf_counter() - t1)
+        dt = time.perf_counter() - t0
+        cl.close()
+        srv.stop()
+        p50, p99 = percentile_stats(lats)
+        rows.append({"name": f"table2/{backend}-rpc",
+                     "us_per_call": 1e6 * dt / len(reqs),
+                     "derived": (f"qps={len(reqs) / dt:.1f} "
+                                 f"p50_ms={p50 * 1e3:.2f} p99_ms={p99 * 1e3:.2f}")})
+    return rows
+
+
+def _engine_rows(cfg, params, corpus, tok, reqs) -> List[Dict]:
+    """Beyond-paper: micro-batched ServingEngine under 8 concurrent
+    clients vs the paper's one-at-a-time TSimpleServer discipline."""
+    import threading
+
+    from repro.core import backends as BK
+    from repro.serving.engine import ServingEngine
+
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(1, 8, 64))
+    eng = ServingEngine(scorer, tok, corpus.idf, cfg.max_len,
+                        max_batch=64, max_wait_s=0.001)
+    eng.get_score(*reqs[0])  # warm
+    per_client = max(len(reqs) // 8, 1)
+
+    def client(cid):
+        for q, a in reqs[cid * per_client:(cid + 1) * per_client]:
+            eng.get_score(q, a)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    n = per_client * 8
+    s = eng.stats()
+    eng.stop()
+    return [{"name": "table2/engine-microbatch-8clients",
+             "us_per_call": 1e6 * dt / n,
+             "derived": (f"qps={n / dt:.1f} p50_ms={s['p50_ms']:.2f} "
+                         f"p99_ms={s['p99_ms']:.2f} "
+                         f"mean_batch={s['mean_batch']:.1f}")}]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

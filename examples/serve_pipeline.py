@@ -1,0 +1,76 @@
+"""End-to-end serving driver (the paper's kind: serve a model with batched
+requests): build a corpus + BM25 index, train the reranker, stand up the RPC
+service, then drive it with a single-threaded client and report
+QPS / p50 / p99 — the paper's Table 2 protocol — plus answers for a few
+questions through the full multi-stage pipeline.
+
+  PYTHONPATH=src python examples/serve_pipeline.py [--requests 200]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.launch.world import build_world, percentile_stats
+from repro.core import backends as BK
+from repro.core import pipeline as PL
+from repro.core import service as SV
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--backend", default="aot", choices=BK.BACKENDS)
+    args = ap.parse_args()
+
+    print("== building world (corpus, index, trained reranker) ==")
+    cfg, params, corpus, tok, index, pairs = build_world(train_steps=80)
+
+    print(f"== serving through RPC ({args.backend} backend) ==")
+    scorer = BK.make_scorer(args.backend, params, cfg, buckets=(1, 8, 64, 256))
+    handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf, cfg.max_len)
+    srv = SV.SimpleServer(handler).start_background()
+    client = SV.Client(srv.address)
+
+    reqs = []
+    for qi, di, si, _ in (pairs * 4)[: args.requests]:
+        reqs.append((corpus.questions[qi], corpus.documents[di][si]))
+    client.get_score(*reqs[0])  # warm the compiled entry
+
+    lats = []
+    t0 = time.perf_counter()
+    for q, a in reqs:
+        t1 = time.perf_counter()
+        client.get_score(q, a)
+        lats.append(time.perf_counter() - t1)
+    dt = time.perf_counter() - t0
+    p50, p99 = percentile_stats(lats)
+    print(f"  {len(reqs)} requests  QPS={len(reqs)/dt:8.1f}  "
+          f"p50={p50*1e3:.2f}ms  p99={p99*1e3:.2f}ms")
+
+    # batched requests through the same service
+    t0 = time.perf_counter()
+    client.get_score_batch(reqs[:64])
+    bdt = time.perf_counter() - t0
+    print(f"  batched(64)          QPS={64/bdt:8.1f}")
+    client.close()
+    srv.stop()
+
+    print("\n== multi-stage pipeline answers ==")
+    ranker = PL.MultiStageRanker([
+        PL.RetrievalStage(index, corpus.documents, tok, h=10),
+        PL.CutoffStage(margin=3.0),
+        PL.RerankStage(scorer, tok, corpus.idf, cfg.max_len, k=3),
+    ])
+    for q in corpus.questions[:3]:
+        final, trace = ranker.run(q)
+        stages = " -> ".join(f"{t.name}({len(t.candidates)}, "
+                             f"{t.latency_s*1e3:.1f}ms)" for t in trace)
+        print(f"  Q: {q}")
+        print(f"     {stages}")
+        if final:
+            print(f"     A: {final[0].text}  (score {final[0].score:.3f})")
+
+
+if __name__ == "__main__":
+    main()

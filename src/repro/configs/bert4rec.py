@@ -1,0 +1,13 @@
+"""bert4rec [arXiv:1904.06690]: bidirectional self-attention sequential recsys."""
+from repro.configs.base import RecsysConfig, RECSYS_SHAPES
+
+CONFIG = RecsysConfig(
+    name="bert4rec",
+    kind="bert4rec",
+    embed_dim=64,
+    n_blocks=2,
+    n_heads=2,
+    seq_len=200,
+    n_items=1000000,
+)
+SHAPES = RECSYS_SHAPES

@@ -1,0 +1,11 @@
+"""meshgraphnet [arXiv:2010.03409]: encode-process-decode GNN, 15 layers, sum agg."""
+from repro.configs.base import GNNConfig, GNN_SHAPES
+
+CONFIG = GNNConfig(
+    name="meshgraphnet",
+    n_layers=15,
+    d_hidden=128,
+    mlp_layers=2,
+    aggregator="sum",
+)
+SHAPES = GNN_SHAPES

@@ -1,0 +1,4 @@
+"""The paper's contribution: multi-stage ranking + serving-integration axes."""
+from repro.core.backends import BACKENDS, Scorer, make_scorer  # noqa: F401
+from repro.core.pipeline import (Candidate, CutoffStage, MultiStageRanker,  # noqa: F401
+                                 RerankStage, RetrievalStage, Stage)

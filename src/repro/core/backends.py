@@ -1,0 +1,112 @@
+"""Integration backends — the paper's three strategies, TPU/JAX-native.
+
+  eager  : op-by-op dispatch (no jit)           ~ PyTorch eager feedforward
+  jit    : jax.jit, weights as runtime args      ~ framework-optimized serving
+  aot    : weights frozen as XLA constants,      ~ 'compile the network into
+           AOT .lower().compile() per shape        a C++ binary'
+  numpy  : export -> pure-NumPy evaluator        ~ Deeplearning4J import
+  pallas : jit + fused Pallas conv kernel        ~ hand-optimized Blaze/BLAS
+  artifact: serialized jax.export StableHLO      ~ the shipped single binary
+
+All backends expose ``score(q_tok, a_tok, feats) -> np.ndarray`` with
+identical semantics (bit-comparable within dtype), so Table 1/2 benchmarks
+measure integration overhead, not model differences.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TextPairConfig
+from repro.core import compiled_artifact, export as export_lib, numpy_eval
+from repro.models import sm_cnn
+
+BACKENDS = ("eager", "jit", "aot", "numpy", "pallas", "artifact")
+
+
+def _bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class Scorer:
+    """Uniform scoring interface over any integration backend."""
+
+    def __init__(self, fn: Callable, buckets: Sequence[int], name: str):
+        self._fn = fn
+        self._buckets = tuple(buckets)
+        self.name = name
+
+    def __call__(self, q_tok, a_tok, feats) -> np.ndarray:
+        n = q_tok.shape[0]
+        b = _bucket(n, self._buckets)
+        if b != n:  # pad to bucket so jit/aot hit their compiled entry
+            pad = b - n
+            q_tok = np.concatenate([q_tok, np.zeros((pad,) + q_tok.shape[1:], q_tok.dtype)])
+            a_tok = np.concatenate([a_tok, np.zeros((pad,) + a_tok.shape[1:], a_tok.dtype)])
+            feats = np.concatenate([feats, np.zeros((pad,) + feats.shape[1:], feats.dtype)])
+        out = np.asarray(self._fn(q_tok, a_tok, feats))
+        return out[:n]
+
+
+def make_scorer(backend: str, params: Dict, cfg: TextPairConfig,
+                buckets: Sequence[int] = (1, 8, 64, 256)) -> Scorer:
+    if backend == "eager":
+        fn = functools.partial(sm_cnn.score, params, cfg=cfg)
+        # block_until_ready via np.asarray in Scorer
+        return Scorer(lambda q, a, f: fn(jnp.asarray(q), jnp.asarray(a),
+                                         jnp.asarray(f)), buckets, backend)
+
+    if backend == "jit":
+        jfn = jax.jit(functools.partial(sm_cnn.score, cfg=cfg))
+        return Scorer(lambda q, a, f: jfn(params, q, a, f), buckets, backend)
+
+    if backend == "aot":
+        # weights closed over as constants; shape-specialized AOT compiles
+        frozen = jax.tree.map(jnp.asarray, params)
+        base = jax.jit(lambda q, a, f: sm_cnn.score(frozen, q, a, f, cfg))
+        compiled: Dict[int, Callable] = {}
+        for b in buckets:
+            specs = (jax.ShapeDtypeStruct((b, cfg.max_len), jnp.int32),
+                     jax.ShapeDtypeStruct((b, cfg.max_len), jnp.int32),
+                     jax.ShapeDtypeStruct((b, cfg.n_extra_feats), jnp.float32))
+            compiled[b] = base.lower(*specs).compile()
+        return Scorer(lambda q, a, f: compiled[q.shape[0]](
+            jnp.asarray(q, jnp.int32), jnp.asarray(a, jnp.int32),
+            jnp.asarray(f, jnp.float32)), buckets, backend)
+
+    if backend == "numpy":
+        blob = export_lib.dumps(params, model=cfg.name,
+                                meta={"filter_width": cfg.filter_width})
+        ev = numpy_eval.NumpySMCNN.from_bytes(blob)
+        return Scorer(lambda q, a, f: ev.get_score(np.asarray(q), np.asarray(a),
+                                                   np.asarray(f)), buckets, backend)
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        jfn = jax.jit(functools.partial(kops.sm_cnn_score, cfg=cfg))
+        return Scorer(lambda q, a, f: jfn(params, q, a, f), buckets, backend)
+
+    if backend == "artifact":
+        frozen = jax.tree.map(jnp.asarray, params)
+        shapes = {f"b{b}": (
+            jax.ShapeDtypeStruct((b, cfg.max_len), jnp.int32),
+            jax.ShapeDtypeStruct((b, cfg.max_len), jnp.int32),
+            jax.ShapeDtypeStruct((b, cfg.n_extra_feats), jnp.float32))
+            for b in buckets}
+        blob = compiled_artifact.build_artifact(
+            lambda q, a, f: sm_cnn.score(frozen, q, a, f, cfg), shapes,
+            meta={"model": cfg.name})
+        art = compiled_artifact.CompiledArtifact.from_bytes(blob)
+        return Scorer(lambda q, a, f: art.call(
+            f"b{q.shape[0]}", jnp.asarray(q, jnp.int32),
+            jnp.asarray(a, jnp.int32), jnp.asarray(f, jnp.float32)),
+            buckets, backend)
+
+    raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")

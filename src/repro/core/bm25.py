@@ -1,0 +1,111 @@
+"""Stage-1 candidate generation: BM25 over a packed doc-term index, in JAX.
+
+Index construction is host-side numpy (inverted lists are inherently ragged);
+scoring is device-side JAX over the query's concatenated postings:
+``score contributions = idf * tf_saturation``, combined per document with
+``jax.ops.segment_sum`` and cut to top-h with ``jax.lax.top_k`` — the same
+gather/segment substrate the GNN and recsys layers use.
+
+Postings for a query are padded to a fixed budget so the scoring function is
+jit-stable across queries (one compiled entry per budget bucket).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+K1 = 0.9
+B = 0.4
+
+
+@dataclasses.dataclass
+class BM25Index:
+    term_ptr: np.ndarray      # (V+1,) CSR pointer into postings
+    post_docs: np.ndarray     # (nnz,) doc ids
+    post_tf: np.ndarray       # (nnz,) term frequencies
+    idf: np.ndarray           # (V,)
+    doc_len: np.ndarray       # (N,)
+    avg_dl: float
+    n_docs: int
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.term_ptr) - 1
+
+
+def build_index(docs_tokens: Sequence[Sequence[int]], vocab_size: int) -> BM25Index:
+    n_docs = len(docs_tokens)
+    doc_len = np.asarray([len(d) for d in docs_tokens], np.float32)
+    # term -> [(doc, tf)]
+    postings: Dict[int, Dict[int, int]] = {}
+    for di, toks in enumerate(docs_tokens):
+        for t in toks:
+            postings.setdefault(int(t), {})
+            postings[int(t)][di] = postings[int(t)].get(di, 0) + 1
+    term_ptr = np.zeros((vocab_size + 1,), np.int64)
+    for t, plist in postings.items():
+        term_ptr[t + 1] = len(plist)
+    term_ptr = np.cumsum(term_ptr)
+    nnz = int(term_ptr[-1])
+    post_docs = np.zeros((nnz,), np.int32)
+    post_tf = np.zeros((nnz,), np.float32)
+    for t, plist in postings.items():
+        s = term_ptr[t]
+        for i, (di, tf) in enumerate(sorted(plist.items())):
+            post_docs[s + i] = di
+            post_tf[s + i] = tf
+    df = np.diff(term_ptr).astype(np.float32)
+    idf = np.log((n_docs - df + 0.5) / (df + 0.5) + 1.0).astype(np.float32)
+    return BM25Index(term_ptr, post_docs, post_tf, idf, doc_len,
+                     float(doc_len.mean() or 1.0), n_docs)
+
+
+def gather_query_postings(index: BM25Index, query_terms: Sequence[int],
+                          budget: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side ragged gather -> fixed-size (docs, tf, idf_per_posting)."""
+    docs, tfs, idfs = [], [], []
+    for t in query_terms:
+        if t < 0 or t >= index.vocab_size:
+            continue
+        s, e = int(index.term_ptr[t]), int(index.term_ptr[t + 1])
+        docs.append(index.post_docs[s:e])
+        tfs.append(index.post_tf[s:e])
+        idfs.append(np.full((e - s,), index.idf[t], np.float32))
+    if docs:
+        docs = np.concatenate(docs)[:budget]
+        tfs = np.concatenate(tfs)[:budget]
+        idfs = np.concatenate(idfs)[:budget]
+    else:
+        docs = np.zeros((0,), np.int32)
+        tfs = np.zeros((0,), np.float32)
+        idfs = np.zeros((0,), np.float32)
+    pad = budget - len(docs)
+    # padding postings point at doc 0 with idf 0 -> zero contribution
+    docs = np.concatenate([docs, np.zeros((pad,), np.int32)])
+    tfs = np.concatenate([tfs, np.zeros((pad,), np.float32)])
+    idfs = np.concatenate([idfs, np.zeros((pad,), np.float32)])
+    return docs.astype(np.int32), tfs, idfs
+
+
+@functools.partial(jax.jit, static_argnames=("h",))
+def _score_postings(post_docs, post_tf, post_idf, doc_len, avg_dl, h):
+    norm = K1 * (1.0 - B + B * doc_len[post_docs] / avg_dl)
+    contrib = post_idf * post_tf * (K1 + 1.0) / (post_tf + norm)
+    scores = jax.ops.segment_sum(contrib, post_docs,
+                                 num_segments=doc_len.shape[0])
+    return jax.lax.top_k(scores, h)
+
+
+def retrieve(index: BM25Index, query_terms: Sequence[int], h: int,
+             budget: int = 16384) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-h (scores, doc_ids) for a query."""
+    docs, tfs, idfs = gather_query_postings(index, query_terms, budget)
+    scores, ids = _score_postings(docs, tfs, idfs,
+                                  jnp.asarray(index.doc_len),
+                                  index.avg_dl, h)
+    return np.asarray(scores), np.asarray(ids)

@@ -1,0 +1,108 @@
+"""Socket RPC service — the paper's Thrift TSimpleServer analogue.
+
+Single-threaded accept loop, one connection at a time, repeated requests per
+connection: exactly TSimpleServer semantics, so the measured overhead
+(serialization + transport + dispatch) is comparable to the paper's Table 2.
+The handler wraps ANY integration backend (Scorer) plus the tokenizer and
+overlap featurizer — mirroring QuestionAnsweringHandler in Figure 3.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import wire
+from repro.core.backends import Scorer
+from repro.data.tokenizer import HashingTokenizer, overlap_features
+
+
+class QuestionAnsweringHandler:
+    """getScore(question, answer) -> double, over a Scorer backend."""
+
+    def __init__(self, scorer: Scorer, tokenizer: HashingTokenizer,
+                 idf: Dict[str, float], max_len: int):
+        self.scorer = scorer
+        self.tok = tokenizer
+        self.idf = idf
+        self.max_len = max_len
+
+    def get_scores(self, pairs: Sequence[Tuple[str, str]]) -> np.ndarray:
+        q_tok = self.tok.encode_batch([q for q, _ in pairs], self.max_len)
+        a_tok = self.tok.encode_batch([a for _, a in pairs], self.max_len)
+        feats = np.stack([overlap_features(self.tok.words(q),
+                                           self.tok.words(a), self.idf)
+                          for q, a in pairs])
+        return self.scorer(q_tok, a_tok, feats)
+
+
+class SimpleServer:
+    """TSimpleServer: single thread, one connection at a time."""
+
+    def __init__(self, handler: QuestionAnsweringHandler, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.handler = handler
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(1)
+        self.address = self._sock.getsockname()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def serve_forever(self):
+        self._sock.settimeout(0.2)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            with conn:
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                while not self._stop.is_set():
+                    try:
+                        t, payload = wire.read_frame(conn)
+                    except (ConnectionError, socket.timeout):
+                        break
+                    if not t:
+                        break
+                    try:
+                        pairs = wire.decode_request(t, payload)
+                        scores = self.handler.get_scores(pairs)
+                        conn.sendall(wire.encode_reply([float(s) for s in scores]))
+                    except Exception as e:  # noqa: BLE001 — service boundary
+                        conn.sendall(wire.encode_error(str(e)))
+
+    def start_background(self) -> "SimpleServer":
+        self._thread = threading.Thread(target=self.serve_forever, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+        self._sock.close()
+
+
+class Client:
+    """Blocking single-connection client (the paper's single-thread client)."""
+
+    def __init__(self, address: Tuple[str, int]):
+        self._sock = socket.create_connection(address)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def get_score(self, question: str, answer: str) -> float:
+        self._sock.sendall(wire.encode_get_score(question, answer))
+        t, payload = wire.read_frame(self._sock)
+        return wire.decode_reply(t, payload)[0]
+
+    def get_score_batch(self, pairs: Sequence[Tuple[str, str]]):
+        self._sock.sendall(wire.encode_get_score_batch(pairs))
+        t, payload = wire.read_frame(self._sock)
+        return wire.decode_reply(t, payload)
+
+    def close(self):
+        self._sock.close()

@@ -1,0 +1,113 @@
+"""Compact binary wire protocol — the paper's Thrift IDL analogue.
+
+IDL (mirrors Figure 2 of the paper):
+
+  service QuestionAnswering {
+    double getScore(1: string question, 2: string answer)
+    list<double> getScoreBatch(1: list<Pair> pairs)
+  }
+
+Frame: u32 payload_len | u8 msg_type | payload. Strings are u32-len-prefixed
+UTF-8. Doubles are little-endian f64. Field ids are implicit in order (the
+schema-evolution story is the header's version byte).
+"""
+from __future__ import annotations
+
+import socket
+import struct
+from typing import List, Sequence, Tuple
+
+VERSION = 1
+MSG_GET_SCORE = 1
+MSG_GET_SCORE_BATCH = 2
+MSG_REPLY_SCORE = 101
+MSG_REPLY_SCORES = 102
+MSG_ERROR = 255
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode()
+    return struct.pack("<I", len(b)) + b
+
+
+def _unpack_str(buf: memoryview, off: int) -> Tuple[str, int]:
+    (n,) = struct.unpack_from("<I", buf, off)
+    return bytes(buf[off + 4:off + 4 + n]).decode(), off + 4 + n
+
+
+def encode_get_score(question: str, answer: str) -> bytes:
+    payload = bytes([VERSION]) + _pack_str(question) + _pack_str(answer)
+    return struct.pack("<IB", len(payload), MSG_GET_SCORE) + payload
+
+
+def encode_get_score_batch(pairs: Sequence[Tuple[str, str]]) -> bytes:
+    payload = bytes([VERSION]) + struct.pack("<I", len(pairs))
+    for q, a in pairs:
+        payload += _pack_str(q) + _pack_str(a)
+    return struct.pack("<IB", len(payload), MSG_GET_SCORE_BATCH) + payload
+
+
+def encode_reply(scores: Sequence[float]) -> bytes:
+    if len(scores) == 1:
+        payload = struct.pack("<d", scores[0])
+        return struct.pack("<IB", len(payload), MSG_REPLY_SCORE) + payload
+    payload = struct.pack("<I", len(scores)) + struct.pack(f"<{len(scores)}d", *scores)
+    return struct.pack("<IB", len(payload), MSG_REPLY_SCORES) + payload
+
+
+def encode_error(msg: str) -> bytes:
+    payload = _pack_str(msg)
+    return struct.pack("<IB", len(payload), MSG_ERROR) + payload
+
+
+def read_frame(sock: socket.socket) -> Tuple[int, bytes]:
+    head = _read_exact(sock, 5)
+    if not head:
+        return 0, b""
+    n, t = struct.unpack("<IB", head)
+    return t, _read_exact(sock, n)
+
+
+def _read_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        c = sock.recv(n - got)
+        if not c:
+            return b"" if not chunks else b"".join(chunks)
+        chunks.append(c)
+        got += len(c)
+    return b"".join(chunks)
+
+
+def decode_request(msg_type: int, payload: bytes) -> List[Tuple[str, str]]:
+    buf = memoryview(payload)
+    ver = buf[0]
+    if ver != VERSION:
+        raise ValueError(f"wire version {ver} != {VERSION}")
+    off = 1
+    if msg_type == MSG_GET_SCORE:
+        q, off = _unpack_str(buf, off)
+        a, off = _unpack_str(buf, off)
+        return [(q, a)]
+    if msg_type == MSG_GET_SCORE_BATCH:
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        pairs = []
+        for _ in range(n):
+            q, off = _unpack_str(buf, off)
+            a, off = _unpack_str(buf, off)
+            pairs.append((q, a))
+        return pairs
+    raise ValueError(f"unknown msg type {msg_type}")
+
+
+def decode_reply(msg_type: int, payload: bytes) -> List[float]:
+    if msg_type == MSG_REPLY_SCORE:
+        return [struct.unpack("<d", payload)[0]]
+    if msg_type == MSG_REPLY_SCORES:
+        (n,) = struct.unpack_from("<I", payload, 0)
+        return list(struct.unpack_from(f"<{n}d", payload, 4))
+    if msg_type == MSG_ERROR:
+        raise RuntimeError(f"server error: {payload[4:].decode()}")
+    raise ValueError(f"unknown reply type {msg_type}")

@@ -1,0 +1,99 @@
+"""Activation-sharding context: lets pure model code place sharding
+constraints without threading a mesh through every call.
+
+Model code calls ``constrain(x, kind)``; outside a context it is the
+identity, inside it applies ``with_sharding_constraint`` with the rule
+registered for ``kind`` (skipping axes that don't divide). This is the
+Megatron-SP mechanism: one constraint on the residual stream per block is
+enough for the SPMD partitioner to keep the whole block sequence-sharded
+and to insert the k/v all-gathers exactly where tensor parallelism needs
+them.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("sharding_ctx",
+                                                      default=None)
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: object
+    rules: Dict[str, P]
+    moe_a2a: bool = False       # route MoE through the shard_map all-to-all
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: Dict[str, P], moe_a2a: bool = False):
+    tok = _CTX.set(ShardingRules(mesh, rules, moe_a2a))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current():
+    return _CTX.get()
+
+
+def _fits(spec: P, shape) -> bool:
+    ctx = _CTX.get()
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= ctx.mesh.shape[a]
+        if dim % n != 0:
+            return False
+    return True
+
+
+def constrain(x, kind: str):
+    """Apply the sharding rule registered for ``kind`` (identity if none)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = ctx.rules.get(kind)
+    if spec is None or len(spec) > x.ndim or not _fits(spec, x.shape):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def gnn_rules(mesh) -> Dict[str, P]:
+    """Full-graph cells: node-latent rows shard over 'model'; edges shard
+    over the data axes (set by the batch specs)."""
+    return {"nodes": P("model", None)}
+
+
+def recsys_rules(mesh) -> Dict[str, P]:
+    """Retrieval: per-candidate tensors shard their leading dim over the
+    WHOLE mesh (candidate parallelism)."""
+    every = tuple(mesh.axis_names)
+    return {"candidates": P(every)}
+
+
+def lm_rules(mesh, sequence_parallel: bool = True) -> Dict[str, P]:
+    from repro.distributed.mesh import data_axes
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    rules = {
+        # gather sequence before the head matmul so logits shard over vocab
+        "pre_logits": P(dpa, None, None),
+        "logits": P(dpa, None, "model"),
+        "logits_2d": P(dpa, "model"),
+    }
+    if sequence_parallel:
+        rules["residual"] = P(dpa, "model", None)
+    else:
+        rules["residual"] = P(dpa, None, None)
+    return rules

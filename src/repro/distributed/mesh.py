@@ -1,0 +1,40 @@
+"""Mesh construction + axis conventions.
+
+Axes:
+  pod   — slowest axis (data-center network / optical inter-pod links);
+          pure data parallelism + compressed gradient all-reduce.
+  data  — intra-pod ICI data parallelism (batch, edges, candidates, groups).
+  model — tensor/expert/table parallelism (heads, ffn, experts, vocab rows).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state); the dry-run launcher sets
+``--xla_force_host_platform_device_count=512`` before first jax init.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes used for batch-like sharding (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh, *names: str) -> int:
+    n = 1
+    for name in names:
+        if name in mesh.axis_names:
+            n *= mesh.shape[name]
+    return n

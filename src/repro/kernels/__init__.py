@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU; Mosaic on TPU)."""
+from repro.kernels import ops, ref  # noqa: F401

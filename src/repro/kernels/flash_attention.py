@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: causal GQA FlashAttention forward (prefill hot path).
+
+Grid: (batch, kv_head, q_blocks). Each program owns a q tile of
+(G * block_q, d) rows — the G query heads sharing one KV head are FOLDED
+into the tile's row dim, so one MXU matmul serves the whole GQA group and
+K/V are read once at Hkv width (the 32k-prefill roofline term). The kv loop
+runs the online-softmax recurrence with (m, l, acc) carries in VMEM;
+fully-masked kv tiles are skipped via the causal block bound.
+
+MXU alignment: block_q/block_kv default 128 and d_head is 64/128 in every
+assigned config. Numerics: f32 accumulate, bf16 tiles (validated against
+ref.flash_attention_ref in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int,
+            scale: float, seq_len: int, g: int):
+    # q_ref: (1, 1, block_q, G, d) ; k_ref/v_ref: (1, S, 1, d)
+    qi = pl.program_id(2)
+    d = q_ref.shape[-1]
+    rows = g * block_q
+    q = q_ref[0, 0].reshape(rows, d)                     # (G*Bq, d)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, g), 0).reshape(rows)        # row -> q position
+
+    n_kv = seq_len // block_kv
+    # causal: kv tiles strictly after this q tile contribute nothing
+    last_tile = (qi * block_q + block_q - 1) // block_kv + 1
+
+    def body(ki, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(ki * block_kv, block_kv), 0, :]
+        v = v_ref[0, pl.dslice(ki * block_kv, block_kv), 0, :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kv_pos = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_kv), 1)
+        s = jnp.where(kv_pos <= q_pos[:, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc = acc * corr[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((rows, d), jnp.float32)
+    m0 = jnp.full((rows,), -1e30, jnp.float32)
+    l0 = jnp.zeros((rows,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, last_tile, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.reshape(block_q, g, d).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (B, S, H, d); k, v (B, S, Hkv, d) -> (B, S, H, d), causal."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    scale = 1.0 / math.sqrt(d)
+    # (B, S, H, d) -> (B, Hkv, S, G, d): the kernel's q tile layout
+    qg = q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_kv=block_kv,
+                          scale=scale, seq_len=s, g=g),
+        grid=(b, hkv, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, g, d), lambda bi, hi, qi: (bi, hi, qi, 0, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda bi, hi, qi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, s, 1, d), lambda bi, hi, qi: (bi, 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, g, d),
+                               lambda bi, hi, qi: (bi, hi, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, s // block_q * block_q, g, d),
+                                       q.dtype),
+        interpret=interpret,
+    )(qg, k, v)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, d)

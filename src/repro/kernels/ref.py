@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_tanh_maxpool_ref(x_emb: jnp.ndarray, filters: jnp.ndarray,
+                          bias: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Wide conv1d + bias + tanh + global max-pool via explicit im2col."""
+    b, s, d = x_emb.shape
+    pad = width - 1
+    xp = jnp.pad(x_emb, ((0, 0), (pad, pad), (0, 0)))
+    n_win = s + width - 1
+    cols = jnp.concatenate([xp[:, i:i + n_win, :] for i in range(width)],
+                           axis=-1)
+    h = jnp.tanh(jnp.dot(cols, filters, preferred_element_type=jnp.float32)
+                 + bias.astype(jnp.float32))
+    return jnp.max(h, axis=1).astype(x_emb.dtype)
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """take + weighted sum over the bag dim (the jnp EmbeddingBag)."""
+    rows = jnp.take(table, ids, axis=0).astype(jnp.float32)   # (B, L, d)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    return jnp.sum(rows, axis=1).astype(table.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Materialized-softmax causal GQA attention (fp32 softmax)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    pos = jnp.arange(s)
+    scores = jnp.where(pos[None, :] <= pos[:, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: the paper's CNN hot spot, fused.
+
+wide-conv1d(x, filters) + bias + tanh + global max-pool  ->  (B, F)
+
+The paper's §4.1 observation — naive per-filter convolution is two orders of
+magnitude slower than the im2col-GEMM formulation — restated for the TPU
+memory hierarchy: instead of materializing the im2col matrix in HBM, each
+batch block's embeddings are staged HBM->VMEM ONCE, the wide convolution is
+expressed as ``filter_width`` shifted (S+w-1, d) x (d, F) matmuls driven
+through the MXU, and bias+tanh+max-pool run on the VPU while the tile is
+still resident. The conv output never round-trips to HBM.
+
+Grid: one program per batch block. VMEM per program (defaults, fp32):
+x_pad (Bblk, S+2w-2, d) + filters (w, d, F) + acc (S+w-1, F) ~ a few hundred
+KB; MXU alignment favours F and d padded to multiples of 128 on real silicon
+(validated in interpret mode here, where alignment is irrelevant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, width: int, n_win: int):
+    # x_ref: (Bblk, S + 2(w-1), d); w_ref: (w, d, F); b_ref: (1, F)
+    bblk = x_ref.shape[0]
+    f = w_ref.shape[2]
+    bias = b_ref[0, :]
+
+    def one_sample(i, _):
+        x = x_ref[i]                                   # (S+2p, d) in VMEM
+        acc = jnp.zeros((n_win, f), jnp.float32)
+        for j in range(width):                         # static unroll
+            acc += jnp.dot(x[j:j + n_win, :], w_ref[j],
+                           preferred_element_type=jnp.float32)
+        h = jnp.tanh(acc + bias[None, :])
+        o_ref[i, :] = jnp.max(h, axis=0).astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bblk, one_sample, 0)
+
+
+def conv_tanh_maxpool(x_emb: jnp.ndarray, filters: jnp.ndarray,
+                      bias: jnp.ndarray, width: int,
+                      block_b: int = 8, interpret: bool = False
+                      ) -> jnp.ndarray:
+    """x_emb (B, S, d); filters (w*d, F) in the im2col layout the model
+    stores; bias (F,). Returns (B, F)."""
+    b, s, d = x_emb.shape
+    f = filters.shape[1]
+    pad = width - 1
+    n_win = s + width - 1
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    x_pad = jnp.pad(x_emb, ((0, 0), (pad, pad), (0, 0)))
+    w3 = filters.reshape(width, d, f)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, width=width, n_win=n_win),
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, s + 2 * pad, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((width, d, f), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f), x_emb.dtype),
+        interpret=interpret,
+    )(x_pad, w3, bias[None, :])

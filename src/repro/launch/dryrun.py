@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import touches jax: device count locks on init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline inputs.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dlrm-mlperf --shape train_batch --multi-pod
+
+Per cell it records: memory_analysis (fits?), cost_analysis, loop-corrected
+HLO FLOP/byte counts, the collective schedule (op x count x bytes), and
+writes artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline table.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, cells, get_config, get_shapes, shape_applicable  # noqa: E402
+from repro.distributed.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import plan_cell  # noqa: E402
+from repro.roofline.analysis import build_roofline, model_flops  # noqa: E402
+from repro.roofline.hlo_parse import analyze  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        plan = plan_cell(arch, shape_name, mesh)
+        jitted = jax.jit(plan.fn, out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate)
+        lowered = jitted.lower(*plan.args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": (ma.argument_size_in_bytes +
+                                    ma.output_size_in_bytes +
+                                    ma.temp_size_in_bytes -
+                                    ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float)) and
+                                k in ("flops", "bytes accessed",
+                                      "transcendentals")}
+        hlo = compiled.as_text()
+        rec["hlo_chars"] = len(hlo)
+        counts = analyze(hlo, n_devices=mesh.size,
+                         default_trip=plan.default_trip)
+        roof = build_roofline(arch, shape_name, mesh_name, mesh.size, counts)
+        rec["roofline"] = roof.row()
+        rec["meta"] = plan.meta
+        rec["ok"] = True
+        if save_hlo:
+            with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo"),
+                      "w") as f:
+                f.write(hlo)
+        del compiled, lowered, hlo
+    except Exception as e:  # noqa: BLE001 — a failing cell is a report, not a crash
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def skip_record(arch: str, shape_name: str, why: str, out_dir: str) -> dict:
+    rec = {"arch": arch, "shape": shape_name, "mesh": "-", "ok": True,
+           "skipped": why}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{arch}__{shape_name}__skip.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-paper-arch", action="store_true",
+                    help="also run the sm-cnn cells")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    todo = []
+    archs = list(ASSIGNED_ARCHS)
+    if args.include_paper_arch:
+        archs.append("sm-cnn")
+    if args.all:
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape in get_shapes(arch):
+                todo.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cfg = get_config(args.arch)
+        shape = next(s for s in get_shapes(args.arch) if s.name == args.shape)
+        todo.append((args.arch, shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_ok = n_fail = 0
+    for arch, shape in todo:
+        cfg = get_config(arch)
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            skip_record(arch, shape.name, why, args.out)
+            print(f"SKIP  {arch:22s} {shape.name:14s} ({why.split(':')[0]})")
+            continue
+        for mp in meshes:
+            rec = run_cell(arch, shape.name, mp, args.out, args.save_hlo)
+            tag = "ok" if rec["ok"] else "FAIL"
+            if rec["ok"]:
+                n_ok += 1
+                r = rec["roofline"]
+                peak = rec["memory"]["peak_estimate_bytes"] / 2**30
+                print(f"{tag:5s} {arch:22s} {shape.name:14s} {rec['mesh']:10s} "
+                      f"compile={rec['compile_s']:7.1f}s peak={peak:6.2f}GiB "
+                      f"bottleneck={r['bottleneck']:10s} step={r['step_s']*1e3:9.3f}ms "
+                      f"roofline={r['roofline_frac']*100:5.1f}%")
+            else:
+                n_fail += 1
+                print(f"{tag:5s} {arch:22s} {shape.name:14s} {rec['mesh']:10s} "
+                      f"{rec['error'][:140]}")
+    print(f"\ndone: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

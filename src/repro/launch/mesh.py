@@ -1,0 +1,3 @@
+"""Production mesh entry point (re-export; see repro.distributed.mesh)."""
+from repro.distributed.mesh import (axis_size, data_axes, make_mesh,  # noqa: F401
+                                    make_production_mesh)

@@ -1,0 +1,35 @@
+"""Serving launcher: stand up the QA reranking service on any backend.
+
+  PYTHONPATH=src python -m repro.launch.serve --backend aot --port 9090
+  (then drive it with repro.core.service.Client or examples/serve_pipeline)
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.launch.world import build_world
+from repro.core import backends as BK
+from repro.core import service as SV
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="aot", choices=BK.BACKENDS)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--train-steps", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg, params, corpus, tok, index, _ = build_world(args.train_steps)
+    scorer = BK.make_scorer(args.backend, params, cfg, buckets=(1, 8, 64, 256))
+    handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf, cfg.max_len)
+    srv = SV.SimpleServer(handler, host=args.host, port=args.port)
+    print(f"serving QuestionAnswering ({args.backend}) on {srv.address}")
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        srv.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,421 @@
+"""Dry-run cell planning: (arch x shape x mesh) -> jit-able plan.
+
+``plan_cell`` builds, WITHOUT allocating anything (jax.eval_shape +
+ShapeDtypeStruct everywhere):
+  - the step function (train_step / prefill / serve_step / retrieval),
+  - abstract inputs with their NamedShardings (params, optimizer state,
+    batch, KV cache),
+  - out_shardings enforcing the ZeRO/TP contract on outputs,
+  - metadata the roofline needs (scan trip count, token/edge counts).
+
+Divisibility discipline: batch-like leading dims in the assignment are all
+divisible by the data axes (256/512-wide meshes); ragged totals (graph edge
+counts, candidate counts) are padded up to a multiple of the full mesh and
+masked semantically (padding edges are self-loops on node 0, padding
+candidates score-and-drop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_shapes, shape_applicable
+from repro.configs.base import ShapeSpec
+from repro.distributed import sharding as SH
+from repro.distributed.context import (activation_sharding, lm_rules,
+                                       recsys_rules)
+from repro.distributed.mesh import axis_size, data_axes
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import sm_cnn as cnn_lib
+from repro.models import transformer as tfm
+from repro.training import optimizer as opt_lib
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]                  # pytrees of ShapeDtypeStruct
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    default_trip: int
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes_tree, shardings_tree)
+
+
+def _abstract_train_state(init_fn, family: str, mesh):
+    """(param structs+shardings, opt structs+shardings, optimizer,
+    grad_shardings). grad_shardings follow the ZeRO-extended layout so the
+    train step can constrain grads to reduce-scatter instead of all-reduce."""
+    opt = opt_lib.adamw(opt_lib.warmup_cosine_schedule(3e-4, 2000, 100000),
+                        weight_decay=0.1)
+    pshape = jax.eval_shape(init_fn)
+    pspecs = SH.param_specs(pshape, family, mesh)
+    pshard = SH.named(mesh, pspecs)
+    oshape = jax.eval_shape(opt.init, pshape)
+    ospecs = SH.opt_state_specs(oshape, pshape, family, mesh)
+    oshard = SH.named(mesh, ospecs)
+    import numpy as _np
+    gspecs = jax.tree.map(
+        lambda spec, leaf: SH.zero_shard_spec(spec, _np.shape(leaf), mesh),
+        pspecs, pshape)
+    gshard = SH.named(mesh, gspecs)
+    return (_tree_sds(pshape, pshard), pshard,
+            _tree_sds(oshape, oshard), oshard, opt, gshard)
+
+
+def _dp_spec(mesh) -> P:
+    dp = data_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def _dp_size(mesh) -> int:
+    return axis_size(mesh, *data_axes(mesh))
+
+
+def _every(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _plan_lm(arch: str, cfg, shape: ShapeSpec, mesh,
+             sequence_parallel: bool = True) -> CellPlan:
+    dp = _dp_spec(mesh)
+    key = jax.random.PRNGKey(0)
+    rules = lm_rules(mesh, sequence_parallel=sequence_parallel)
+
+    moe_a2a = cfg.moe is not None
+
+    def ctx(fn):
+        @functools.wraps(fn)
+        def wrapped(*a):
+            with activation_sharding(mesh, rules, moe_a2a=moe_a2a):
+                return fn(*a)
+        return wrapped
+
+    if shape.kind == "train":
+        # dense train: FSDP params (no per-layer activation collectives);
+        # MoE train: TP/EP keeps experts resident on the model axis.
+        fam = "lm" if cfg.moe is not None else "lm_fsdp"
+        ps, pshard, os_, oshard, opt, gshard = _abstract_train_state(
+            lambda: tfm.init_lm(key, cfg), fam, mesh)
+        batch = {
+            "tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32,
+                           mesh, P(*dp, None)),
+            "labels": _sds((shape.global_batch, shape.seq_len), jnp.int32,
+                           mesh, P(*dp, None)),
+        }
+
+        @ctx
+        def train_step(params, opt_state, b):
+            (loss, _), grads = jax.value_and_grad(
+                functools.partial(tfm.loss_fn, cfg=cfg), has_aux=True)(params, b)
+            # ZeRO contract: grads land reduce-scattered in the optimizer
+            # shard layout, not all-reduced (§Perf iteration C2)
+            grads = jax.lax.with_sharding_constraint(grads, gshard)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, loss
+
+        return CellPlan(arch, shape.name, shape.kind, train_step,
+                        (ps, os_, batch),
+                        (pshard, oshard, NamedSharding(mesh, P())),
+                        donate=(0, 1), default_trip=cfg.n_layers,
+                        meta={"tokens": shape.global_batch * shape.seq_len})
+
+    serve_cfg = dataclasses.replace(cfg, remat=False)
+    pshape = jax.eval_shape(lambda: tfm.init_lm(key, serve_cfg))
+    pshard = SH.param_shardings(pshape, "lm", mesh)
+    ps = _tree_sds(pshape, pshard)
+
+    if shape.kind == "prefill":
+        tokens = _sds((shape.global_batch, shape.seq_len), jnp.int32,
+                      mesh, P(*dp, None))
+        cshape = jax.eval_shape(lambda: tfm.init_cache(
+            serve_cfg, shape.global_batch, shape.seq_len))
+        cshard = SH.named(mesh, SH.cache_specs(cshape, serve_cfg, mesh))
+        logit_spec = P(*dp, "model" if cfg.vocab_size % axis_size(mesh, "model") == 0 else None)
+
+        @ctx
+        def prefill_step(params, toks):
+            return tfm.prefill(params, toks, serve_cfg)
+
+        return CellPlan(arch, shape.name, shape.kind, prefill_step,
+                        (ps, tokens),
+                        (NamedSharding(mesh, logit_spec), cshard),
+                        donate=(), default_trip=cfg.n_layers,
+                        meta={"tokens": shape.global_batch * shape.seq_len})
+
+    if shape.kind in ("decode", "long_decode"):
+        b = shape.global_batch
+        # >5B-param models quantize the decode cache to int8 (KIVI-style):
+        # halves KV capacity + read bytes; validated for top-1 agreement in
+        # tests/test_arch_smoke.py (§Perf iteration A6)
+        if cfg.n_params() > 5e9:
+            serve_cfg = dataclasses.replace(serve_cfg, kv_quant=True)
+        cshape = jax.eval_shape(lambda: tfm.init_cache(serve_cfg, b, shape.seq_len))
+        cspecs = SH.cache_specs(cshape, serve_cfg, mesh)
+        cshard = SH.named(mesh, cspecs)
+        cs = _tree_sds(cshape, cshard)
+        toks = _sds((b,), jnp.int32, mesh, dp)
+        pos = _sds((b,), jnp.int32, mesh, dp)
+        logit_spec = P(*_dp_spec(mesh), "model" if cfg.vocab_size % axis_size(mesh, "model") == 0 else None)
+
+        def decode(params, cache, t, p):
+            return tfm.decode_step(params, cache, t, p, serve_cfg)
+
+        return CellPlan(arch, shape.name, shape.kind, decode,
+                        (ps, cs, toks, pos),
+                        (NamedSharding(mesh, logit_spec), cshard),
+                        donate=(1,), default_trip=cfg.n_layers,
+                        meta={"tokens": b, "kv_len": shape.seq_len})
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _plan_gnn(arch: str, cfg, shape: ShapeSpec, mesh) -> CellPlan:
+    n_dev = mesh.size
+    key = jax.random.PRNGKey(0)
+    every = _every(mesh)
+    dp = _dp_spec(mesh)
+
+    batched = shape.kind == "graph_batched"
+    d_feat = shape.d_feat
+    init = lambda: gnn_lib.init_gnn(key, cfg, d_feat)  # noqa: E731
+    ps, pshard, os_, oshard, opt, _g = _abstract_train_state(init, "gnn", mesh)
+    dt = jnp.dtype(cfg.dtype)
+
+    if batched:
+        g, n, e = shape.n_graphs, shape.n_nodes, shape.n_edges
+        batch = {
+            "nodes": _sds((g, n, d_feat), dt, mesh, P(*dp, None, None)),
+            "edges": _sds((g, e, cfg.d_edge_in), dt, mesh, P(*dp, None, None)),
+            "senders": _sds((g, e), jnp.int32, mesh, P(*dp, None)),
+            "receivers": _sds((g, e), jnp.int32, mesh, P(*dp, None)),
+            "targets": _sds((g, n, cfg.d_out), dt, mesh, P(*dp, None, None)),
+        }
+        loss = functools.partial(gnn_lib.loss_fn, cfg=cfg, batched=True)
+        tokens = g * n
+    else:
+        # nodes pad to 512 so node latents can shard over 'model' (G1);
+        # padded nodes receive no edges and zero targets
+        n = _pad_to(shape.n_nodes, 512)
+        e = _pad_to(shape.n_edges, n_dev)
+        batch = {
+            "nodes": _sds((n, d_feat), dt, mesh, P(None, None)),
+            "edges": _sds((e, cfg.d_edge_in), dt, mesh, P(every, None)),
+            "senders": _sds((e,), jnp.int32, mesh, P(every)),
+            "receivers": _sds((e,), jnp.int32, mesh, P(every)),
+            "targets": _sds((n, cfg.d_out), dt, mesh, P(None, None)),
+        }
+        if shape.kind == "graph_sampled":
+            batch["node_mask"] = _sds((n,), dt, mesh, P(None))
+        loss = functools.partial(gnn_lib.loss_fn, cfg=cfg, batched=False)
+        tokens = n
+
+    from repro.distributed.context import gnn_rules
+
+    def train_step(params, opt_state, b):
+        with activation_sharding(mesh, gnn_rules(mesh)):
+            (l, _), grads = jax.value_and_grad(loss, has_aux=True)(params, b)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, l
+
+    return CellPlan(arch, shape.name, shape.kind, train_step,
+                    (ps, os_, batch),
+                    (pshard, oshard, NamedSharding(mesh, P())),
+                    donate=(0, 1), default_trip=cfg.n_layers,
+                    meta={"nodes": tokens, "edges": shape.n_edges})
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _rec_batch_structs(cfg, batch_size: int, mesh, kind: str):
+    # recsys MLPs replicate and tables row-shard over the full mesh, so the
+    # batch shards over EVERY axis (pure DP) when divisible
+    every = _every(mesh)
+    n_every = axis_size(mesh, *every)
+    dp = P(every) if batch_size % n_every == 0 else _dp_spec(mesh)
+    b = batch_size
+    if kind == "rec_retrieval":
+        n_cand = _pad_to(1, 1)  # overwritten by caller
+    row = P(*dp, None)
+    if cfg.kind == "fm":
+        return {"ids": _sds((b, cfg.n_sparse), jnp.int32, mesh, row),
+                "label": _sds((b,), jnp.float32, mesh, dp)}
+    if cfg.kind == "dlrm":
+        return {"dense": _sds((b, cfg.n_dense), jnp.float32, mesh, row),
+                "ids": _sds((b, cfg.n_sparse), jnp.int32, mesh, row),
+                "label": _sds((b,), jnp.float32, mesh, dp)}
+    if cfg.kind == "din":
+        return {"hist": _sds((b, cfg.seq_len), jnp.int32, mesh, row),
+                "hist_mask": _sds((b, cfg.seq_len), jnp.float32, mesh, row),
+                "target": _sds((b,), jnp.int32, mesh, dp),
+                "label": _sds((b,), jnp.float32, mesh, dp)}
+    # bert4rec
+    out = {"seq": _sds((b, cfg.seq_len), jnp.int32, mesh, row)}
+    if kind == "rec_train":
+        out["label"] = _sds((b,), jnp.int32, mesh, dp)
+        out["negatives"] = _sds((b, cfg.n_negatives), jnp.int32, mesh, row)
+    else:
+        out["target"] = _sds((b,), jnp.int32, mesh, dp)
+    return out
+
+
+def _plan_recsys(arch: str, cfg, shape: ShapeSpec, mesh) -> CellPlan:
+    key = jax.random.PRNGKey(0)
+    every = _every(mesh)
+    dp = _dp_spec(mesh)
+    trip = cfg.n_blocks if cfg.kind == "bert4rec" else 1
+    init = lambda: rec_lib.init_model(key, cfg)  # noqa: E731
+
+    if shape.kind == "rec_train":
+        ps, pshard, os_, oshard, opt, _g = _abstract_train_state(init, "recsys", mesh)
+        batch = _rec_batch_structs(cfg, shape.batch, mesh, shape.kind)
+        loss = functools.partial(rec_lib.loss_fn, cfg=cfg)
+
+        def train_step(params, opt_state, b):
+            (l, _), grads = jax.value_and_grad(loss, has_aux=True)(params, b)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, l
+
+        return CellPlan(arch, shape.name, shape.kind, train_step,
+                        (ps, os_, batch),
+                        (pshard, oshard, NamedSharding(mesh, P())),
+                        donate=(0, 1), default_trip=trip,
+                        meta={"examples": shape.batch})
+
+    pshape = jax.eval_shape(init)
+    pshard = SH.param_shardings(pshape, "recsys", mesh)
+    ps = _tree_sds(pshape, pshard)
+
+    if shape.kind == "rec_serve":
+        batch = _rec_batch_structs(cfg, shape.batch, mesh, shape.kind)
+        batch.pop("label", None)
+        out_dp = (P(_every(mesh))
+                  if shape.batch % axis_size(mesh, *_every(mesh)) == 0
+                  else _dp_spec(mesh))
+        fn = functools.partial(rec_lib.serve_step, cfg=cfg)
+        return CellPlan(arch, shape.name, shape.kind, fn, (ps, batch),
+                        NamedSharding(mesh, out_dp), donate=(), default_trip=trip,
+                        meta={"examples": shape.batch})
+
+    # rec_retrieval: 1 query vs n_candidates, candidates sharded over EVERYTHING
+    n_cand = _pad_to(shape.n_candidates, mesh.size)
+    if cfg.kind == "fm":
+        batch = {"user_ids": _sds((1, cfg.n_sparse - 1), jnp.int32, mesh, P(None, None)),
+                 "candidates": _sds((n_cand,), jnp.int32, mesh, P(every))}
+        out_spec = P(None, every)
+    elif cfg.kind == "dlrm":
+        batch = {"dense": _sds((1, cfg.n_dense), jnp.float32, mesh, P(None, None)),
+                 "user_ids": _sds((1, cfg.n_sparse - 1), jnp.int32, mesh, P(None, None)),
+                 "candidates": _sds((n_cand,), jnp.int32, mesh, P(every))}
+        out_spec = P(every)
+    elif cfg.kind == "din":
+        batch = {"hist": _sds((1, cfg.seq_len), jnp.int32, mesh, P(None, None)),
+                 "hist_mask": _sds((1, cfg.seq_len), jnp.float32, mesh, P(None, None)),
+                 "candidates": _sds((n_cand,), jnp.int32, mesh, P(every))}
+        out_spec = P(every)
+    else:  # bert4rec
+        batch = {"seq": _sds((1, cfg.seq_len), jnp.int32, mesh, P(None, None)),
+                 "candidates": _sds((n_cand,), jnp.int32, mesh, P(every))}
+        out_spec = P(None, every)
+    rrules = recsys_rules(mesh)
+
+    def fn(params, b):
+        with activation_sharding(mesh, rrules):
+            return rec_lib.retrieval_step(params, b, cfg)
+
+    return CellPlan(arch, shape.name, shape.kind, fn, (ps, batch),
+                    NamedSharding(mesh, out_spec), donate=(),
+                    default_trip=trip, meta={"candidates": shape.n_candidates})
+
+
+# ---------------------------------------------------------------------------
+# Text-pair (the paper's own model)
+# ---------------------------------------------------------------------------
+
+def _plan_textpair(arch: str, cfg, shape: ShapeSpec, mesh) -> CellPlan:
+    key = jax.random.PRNGKey(0)
+    dp = _dp_spec(mesh)
+    b = shape.batch
+    init = lambda: cnn_lib.init_sm_cnn(key, cfg)  # noqa: E731
+    batch = {
+        "q_tok": _sds((b, cfg.max_len), jnp.int32, mesh, P(*dp, None)),
+        "a_tok": _sds((b, cfg.max_len), jnp.int32, mesh, P(*dp, None)),
+        "feats": _sds((b, cfg.n_extra_feats), jnp.float32, mesh, P(*dp, None)),
+    }
+    if shape.kind == "pair_train":
+        batch["label"] = _sds((b,), jnp.int32, mesh, dp)
+        ps, pshard, os_, oshard, opt, _g = _abstract_train_state(init, "textpair", mesh)
+        loss = functools.partial(cnn_lib.loss_fn, cfg=cfg)
+
+        def train_step(params, opt_state, bb):
+            (l, _), grads = jax.value_and_grad(loss, has_aux=True)(params, bb)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, l
+
+        return CellPlan(arch, shape.name, shape.kind, train_step,
+                        (ps, os_, batch),
+                        (pshard, oshard, NamedSharding(mesh, P())),
+                        donate=(0, 1), default_trip=1, meta={"pairs": b})
+
+    pshape = jax.eval_shape(init)
+    pshard = SH.param_shardings(pshape, "textpair", mesh)
+    ps = _tree_sds(pshape, pshard)
+
+    def serve(params, bb):
+        return cnn_lib.score(params, bb["q_tok"], bb["a_tok"], bb["feats"], cfg)
+
+    return CellPlan(arch, shape.name, shape.kind, serve, (ps, batch),
+                    NamedSharding(mesh, dp), donate=(), default_trip=1,
+                    meta={"pairs": b})
+
+
+# ---------------------------------------------------------------------------
+
+def plan_cell(arch: str, shape_name: str, mesh) -> CellPlan:
+    cfg = get_config(arch)
+    shape = next(s for s in get_shapes(arch) if s.name == shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    family = getattr(cfg, "family")
+    return {"lm": _plan_lm, "gnn": _plan_gnn, "recsys": _plan_recsys,
+            "textpair": _plan_textpair}[family](arch, cfg, shape, mesh)
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> Tuple[Any, ...]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    return plan_cell(arch, shape_name, mesh).args

@@ -1,0 +1,369 @@
+"""Foundational layers: norms, RoPE, GQA attention, MLPs, initializers.
+
+Everything is a pure function over explicit param pytrees; params are plain
+dicts of jnp arrays so they serialize through repro.core.export and shard
+through repro.distributed.sharding without framework baggage.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def mlp_params(key, dims: Tuple[int, ...], dtype=jnp.float32) -> Dict:
+    """Plain MLP param stack: dims = (in, h1, ..., out)."""
+    ws, bs = [], []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        ws.append(dense_init(k, a, b, dtype))
+        bs.append(jnp.zeros((b,), dtype))
+    return {"w": ws, "b": bs}
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, act=jax.nn.relu,
+              final_act=None) -> jnp.ndarray:
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = x @ w + b
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: jnp.ndarray, d_head: int, theta: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given positions: (..., d_head//2)."""
+    half = d_head // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, d_head); cos/sin: (..., seq, d_head//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, chunked-causal for long sequences)
+# ---------------------------------------------------------------------------
+
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     chunk: int = 512) -> jnp.ndarray:
+    """Memory-bounded GQA causal attention.
+
+    q: (B, S, H, D); k,v: (B, S, Hkv, D). Grouped-query einsums keep the KV
+    operands at Hkv heads (never materializing the repeat to H — 7x KV bytes
+    for the kv=8 archs). Scans over query chunks so the live score buffer is
+    (B, Hkv, G, chunk, S) instead of (B, H, S, S) — this is what makes the
+    32k prefill lowerable at production shapes. The Pallas flash-attention
+    kernel replaces this on the optimized path.
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    kv_pos = jnp.arange(s)
+
+    def attend(qc: jnp.ndarray, q_pos: jnp.ndarray) -> jnp.ndarray:
+        # qc: (B, C, Hkv, G, D) -> out (B, C, Hkv, G, D).
+        # bf16 operands + fp32 accumulate (preferred_element_type): the MXU
+        # contract — never materialize an fp32 copy of K/V.
+        scores = jnp.einsum("bckgd,bskd->bkgcs", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        scores = jnp.where(mask, scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgcs,bskd->bckgd", p, v)
+
+    qg = q.reshape(b, s, hkv, g, d)
+    if s <= chunk:
+        out = attend(qg, kv_pos)
+        return out.reshape(b, s, h, d)
+
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    n_chunks = s // chunk
+    q_chunks = qg.reshape(b, n_chunks, chunk, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+    def step(_, args):
+        i, qc = args
+        return None, attend(qc, i * chunk + jnp.arange(chunk))
+
+    _, out = jax.lax.scan(step, None, (jnp.arange(n_chunks), q_chunks))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, d)
+
+
+def _pad_kv(k, kv_chunk):
+    """Pad the kv sequence up to a chunk multiple; padded positions sit at
+    kv_pos >= original length > every q position, so the causal mask zeroes
+    them with no extra masking logic."""
+    skv = k.shape[1]
+    pad = (-skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return k
+
+
+def _flash_shapes(q, k, kv_chunk):
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    skv = k.shape[1]
+    assert skv % kv_chunk == 0, (skv, kv_chunk)
+    return b, sq, h, d, hkv, h // hkv, skv, skv // kv_chunk
+
+
+def _chunk_kv(x, n_chunks, kv_chunk):
+    b, skv, hkv, d = x.shape
+    return x.reshape(b, n_chunks, kv_chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+
+
+def _flash_fwd_impl(q, k, v, kv_chunk):
+    kv_chunk = min(kv_chunk, max(k.shape[1], 1))
+    k = _pad_kv(k, kv_chunk)
+    v = _pad_kv(v, kv_chunk)
+    b, sq, h, d, hkv, g, skv, n_chunks = _flash_shapes(q, k, kv_chunk)
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hkv, g, d)
+    q_pos = jnp.arange(sq)
+
+    def step(carry, xs):
+        acc, m, l = carry                      # acc (B,K,G,Sq,D) f32
+        i, kt, vt = xs                         # kt/vt: (B, C, Hkv, D)
+        kv_pos = i * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kt,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(kv_pos[None, :] <= q_pos[:, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vt.dtype), vt,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (jnp.arange(n_chunks), _chunk_kv(k, n_chunks, kv_chunk),
+         _chunk_kv(v, n_chunks, kv_chunk)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))     # (B,K,G,Sq)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention_jnp(q, k, v, kv_chunk: int = 512):
+    """Causal GQA FlashAttention in pure JAX (kv-chunked online softmax) with
+    the real flash BACKWARD (per-tile recompute) as a custom VJP, so grad
+    never materializes (Sq x Skv) scores — residuals are O(B*H*Sq) lse plus
+    q,k,v themselves. The Pallas kernel implements the same tiling natively;
+    this function is both its oracle and the lowering used by the dry-run.
+
+    Under sequence parallelism q/Sq is sequence-sharded while k/v are
+    all-gathered by the partitioner — the score tile stays
+    (B, Hkv, G, Sq_local, kv_chunk)."""
+    return _flash_fwd_impl(q, k, v, kv_chunk)[0]
+
+
+def _flash_fwd_rule(q, k, v, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    skv_orig = k.shape[1]
+    kv_chunk = min(kv_chunk, max(skv_orig, 1))
+    k = _pad_kv(k, kv_chunk)
+    v = _pad_kv(v, kv_chunk)
+    b, sq, h, d, hkv, g, skv, n_chunks = _flash_shapes(q, k, kv_chunk)
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hkv, g, d)
+    dog = dout.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)  # (B,K,G,Sq,D)
+    og = out.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), -1)
+    q_pos = jnp.arange(sq)
+
+    def step(dq, xs):
+        i, kt, vt = xs
+        kv_pos = i * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kt,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(kv_pos[None, :] <= q_pos[:, None], s, -1e30)
+        p = jnp.exp(s - lse[..., None])                       # (B,K,G,Sq,C)
+        dv_t = jnp.einsum("bkgqc,bkgqd->bckd", p, dog.astype(jnp.float32))
+        dp = jnp.einsum("bkgqd,bckd->bkgqc", dog, vt,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bkgqc,bckd->bkgqd", ds.astype(kt.dtype), kt,
+                             preferred_element_type=jnp.float32)
+        dk_t = jnp.einsum("bkgqc,bqkgd->bckd", ds.astype(qg.dtype), qg)
+        return dq, (dk_t.astype(k.dtype), dv_t.astype(v.dtype))
+
+    dq0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(
+        step, dq0,
+        (jnp.arange(n_chunks), _chunk_kv(k, n_chunks, kv_chunk),
+         _chunk_kv(v, n_chunks, kv_chunk)))
+    dq = dq.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, d)[:, :skv_orig]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, skv, hkv, d)[:, :skv_orig]
+    return dq, dk, dv
+
+
+flash_attention_jnp.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Single-token GQA decode attention.
+
+    q: (B, 1, H, D); caches: (B, S, Hkv, D). kv_len masks valid positions.
+    Grouped einsum: the cache is read once at Hkv heads (no repeat_kv
+    materialization — the decode step is KV-bandwidth-bound and this is the
+    term the roofline sees).
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    s = k_cache.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, None, None, :] < kv_len[:, None, None, None]
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# transformer sublayers (params + apply)
+# ---------------------------------------------------------------------------
+
+def attn_params(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+                qk_norm: bool, dtype) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d_model, n_heads * d_head, dtype),
+        "wk": dense_init(k2, d_model, n_kv * d_head, dtype),
+        "wv": dense_init(k3, d_model, n_kv * d_head, dtype),
+        "wo": dense_init(k4, n_heads * d_head, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((d_head,), dtype)
+        p["k_norm"] = jnp.ones((d_head,), dtype)
+    return p
+
+
+def qkv_project(p: Dict, x: jnp.ndarray, n_heads: int, n_kv: int, d_head: int,
+                positions: jnp.ndarray, theta: float):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, d_head)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, d_head)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_table(positions, d_head, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def swiglu_params(key, d_model: int, d_ff: int, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_apply(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32 with optional z-loss.
+
+    Written entirely with reductions over the vocab dim (no take_along_axis
+    gather): under vocab-sharded logits the SPMD partitioner turns each
+    reduction into a local partial + a tiny (B, S) all-reduce, instead of
+    all-gathering the full (B, S, V) logits (7.9 GiB/step on the 33B cell)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None], logits, 0.0)
+    ll = jnp.sum(picked, axis=-1)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

@@ -1,0 +1,110 @@
+"""The paper's answer-selection CNN (Severyn & Moschitti 2015, simplified per
+Rao et al. 2017: no bilinear similarity term).
+
+Siamese structure: each arm embeds a token sequence, applies a WIDE 1-D
+convolution (padding = filter_width-1 on both sides, per the paper's
+``padding=filter_width-1``), tanh, then global max-pool to a (F,) vector.
+The join layer concatenates [x_q; x_a; x_feat(4 overlap features)], applies
+a tanh hidden layer and a 2-way softmax; ``score = P(relevant)``.
+
+Semantics note (shared by ALL backends — jax, numpy_eval, pallas, compiled
+artifact): sequences are fixed-length ``max_len`` with zero *embeddings* at
+pad positions, and max-pool runs over all max_len + width - 1 windows. This
+makes every integration strategy bit-comparable, which is the point of the
+paper's Table 1/2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TextPairConfig
+from repro.models.layers import dense_init, embed_init
+
+
+def init_sm_cnn(key, cfg: TextPairConfig) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    ke, kq, ka, kj, ko = jax.random.split(key, 5)
+    w, d, f = cfg.filter_width, cfg.embed_dim, cfg.conv_filters
+    def conv_init(k):
+        return {
+            # filters stored as (w*d, F): the im2col GEMM operand layout.
+            "w": dense_init(k, w * d, f, dt),
+            "b": jnp.zeros((f,), dt),
+        }
+    j_in = 2 * f + cfg.n_extra_feats
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, d, dt),
+        "conv_q": conv_init(kq),
+        "conv_a": conv_init(ka),
+        "join": {"w": dense_init(kj, j_in, cfg.n_hidden, dt),
+                 "b": jnp.zeros((cfg.n_hidden,), dt)},
+        "out": {"w": dense_init(ko, cfg.n_hidden, 2, dt),
+                "b": jnp.zeros((2,), dt)},
+    }
+
+
+def im2col(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """(B, S, d) -> (B, S + width - 1, width*d) wide-conv window matrix."""
+    b, s, d = x.shape
+    pad = width - 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (0, 0)))
+    n_win = s + width - 1
+    # windows: stack width shifted views (compiles to cheap slices+concat)
+    cols = [xp[:, i:i + n_win, :] for i in range(width)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv_arm(conv: Dict, x_emb: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Wide conv1d + tanh + global max-pool: (B, S, d) -> (B, F)."""
+    cols = im2col(x_emb, width)                  # (B, S+w-1, w*d)
+    h = jnp.tanh(cols @ conv["w"] + conv["b"])   # (B, S+w-1, F)
+    return jnp.max(h, axis=1)
+
+
+def forward(params: Dict, q_tok: jnp.ndarray, a_tok: jnp.ndarray,
+            feats: jnp.ndarray, cfg: TextPairConfig) -> jnp.ndarray:
+    """Returns log-probs (B, 2)."""
+    emb = params["embed"]
+    xq = conv_arm(params["conv_q"], emb[q_tok], cfg.filter_width)
+    xa = conv_arm(params["conv_a"], emb[a_tok], cfg.filter_width)
+    xj = jnp.concatenate([xq, xa, feats.astype(xq.dtype)], axis=-1)
+    h = jnp.tanh(xj @ params["join"]["w"] + params["join"]["b"])
+    logits = h @ params["out"]["w"] + params["out"]["b"]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def score(params: Dict, q_tok, a_tok, feats, cfg: TextPairConfig) -> jnp.ndarray:
+    """P(relevant) — the paper's ``getScore`` (exp of log-softmax column 1)."""
+    return jnp.exp(forward(params, q_tok, a_tok, feats, cfg))[:, 1]
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: TextPairConfig
+            ) -> Tuple[jnp.ndarray, Dict]:
+    logp = forward(params, batch["q_tok"], batch["a_tok"], batch["feats"], cfg)
+    nll = -jnp.mean(jnp.take_along_axis(logp, batch["label"][:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logp, -1) == batch["label"]).astype(jnp.float32))
+    return nll, {"nll": nll, "acc": acc}
+
+
+def naive_conv_arm(conv: Dict, x_emb: jnp.ndarray, width: int) -> jnp.ndarray:
+    """The paper's 'naive ND4J' formulation: loop over filters, slide each
+    filter separately. Kept as the §4.1 contrast condition (two orders of
+    magnitude slower) — used only by benchmarks."""
+    b, s, d = x_emb.shape
+    f = conv["w"].shape[1]
+    pad = width - 1
+    xp = jnp.pad(x_emb, ((0, 0), (pad, pad), (0, 0)))
+    n_win = s + width - 1
+    outs = []
+    w3 = conv["w"].reshape(width, d, f)
+    for fi in range(f):                       # python loop: intentionally naive
+        filt = w3[:, :, fi]                   # (w, d)
+        vals = []
+        for i in range(n_win):
+            win = jax.lax.dynamic_slice_in_dim(xp, i, width, axis=1)
+            vals.append(jnp.sum(win * filt, axis=(1, 2)))
+        outs.append(jnp.max(jnp.tanh(jnp.stack(vals, 1) + conv["b"][fi]), axis=1))
+    return jnp.stack(outs, axis=1)

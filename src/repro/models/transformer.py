@@ -1,0 +1,264 @@
+"""Decoder-only LM: dense or MoE, GQA + RoPE (+qk_norm), scan-over-layers.
+
+Three entry points per the serving taxonomy:
+  loss_fn / forward  — training & prefill-style full-sequence passes
+  prefill            — full pass that also materializes the KV cache
+  decode_step        — one new token against a (B, S, Hkv, Dh) cache per layer
+
+All layer params are stacked on a leading L axis and driven by lax.scan so
+HLO size is depth-independent (62-layer configs compile in seconds).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed import context as shctx
+from repro.distributed.context import constrain
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+
+def _attend(cfg: LMConfig, q, k, v):
+    if cfg.attn_impl == "flash":
+        return L.flash_attention_jnp(q, k, v, cfg.attn_chunk)
+    return L.causal_attention(q, k, v, chunk=cfg.attn_chunk)
+
+
+def _moe(cfg: LMConfig, moe_params, h):
+    """Pick the MoE execution strategy from the sharding context: explicit
+    all-to-all expert parallelism under a mesh, gather/scatter otherwise."""
+    ctx = shctx.current()
+    if ctx is not None and ctx.moe_a2a:
+        return moe_lib.moe_apply_a2a(moe_params, h, cfg, ctx.mesh)
+    return moe_lib.moe_apply(moe_params, h, cfg)
+
+
+def _mask_padded_vocab(logits: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    """-inf at padded vocab columns (Megatron vocab padding)."""
+    if cfg.vocab_padded == cfg.vocab_size:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < cfg.vocab_size, logits, -1e30)
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_layer(key, cfg: LMConfig) -> Dict:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": L.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.d_head, cfg.qk_norm, dt),
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.moe_params(k2, cfg, dt)
+    else:
+        p["mlp"] = L.swiglu_params(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_lm(key, cfg: LMConfig) -> Dict:
+    dt = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_padded, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block(cfg: LMConfig, x: jnp.ndarray, lp: Dict, positions: jnp.ndarray
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One transformer block (full-sequence). Returns (x, moe_aux)."""
+    h = L.rms_norm(x, lp["attn_norm"])
+    q, k, v = L.qkv_project(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.d_head, positions, cfg.rope_theta)
+    o = _attend(cfg, q, k, v)
+    b, s, _, _ = o.shape
+    x = constrain(x + o.reshape(b, s, -1) @ lp["attn"]["wo"], "residual")
+
+    h = L.rms_norm(x, lp["mlp_norm"])
+    if cfg.moe is not None:
+        y, aux = _moe(cfg, lp["moe"], h)
+    else:
+        y, aux = L.swiglu_apply(lp["mlp"], h), jnp.zeros((), jnp.float32)
+    return constrain(x + y, "residual"), aux
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: LMConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> (logits (B, S, V), moe_aux)."""
+    x = constrain(params["embed"][tokens].astype(_dtype(cfg)), "residual")
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        x, aux = _block(cfg, x, lp, positions)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxes = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    # vocab-sharded logits: CE reduces over the sharded vocab dim in-place
+    logits = constrain(constrain(x, "pre_logits") @ head, "logits")
+    return _mask_padded_vocab(logits, cfg), jnp.sum(auxes)
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: LMConfig,
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    ce = L.cross_entropy(logits, batch["labels"], z_loss=1e-4)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params: Dict, tokens: jnp.ndarray, cfg: LMConfig
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Full pass materializing the KV cache.
+
+    Returns (last-position logits (B, V), cache {k,v: (L, B, S, Hkv, Dh)}).
+    """
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["attn_norm"])
+        q, k, v = L.qkv_project(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.d_head, positions, cfg.rope_theta)
+        o = _attend(cfg, q, k, v)
+        b, s, _, _ = o.shape
+        x = constrain(x + o.reshape(b, s, -1) @ lp["attn"]["wo"], "residual")
+        h = L.rms_norm(x, lp["mlp_norm"])
+        if cfg.moe is not None:
+            y, _ = _moe(cfg, lp["moe"], h)
+        else:
+            y = L.swiglu_apply(lp["mlp"], h)
+        return constrain(x + y, "residual"), (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x[:, -1:, :], params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = _mask_padded_vocab((x @ head)[:, 0, :], cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> Dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    if cfg.kv_quant:
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    dt = dtype or _dtype(cfg)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _kv_quantize(x: jnp.ndarray):
+    """x (..., dh) -> (int8 rows, per-row scale). KIVI-style per-(token,
+    head) absmax scaling."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dt):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dt)
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg: LMConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.
+
+    tokens: (B,) int32 new token ids; pos: (B,) their positions.
+    cache: {k,v: (L, B, S, Hkv, Dh)}. Returns (logits (B, V), new cache).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :].astype(_dtype(cfg))   # (B,1,d)
+    batch_ix = jnp.arange(b)
+
+    # The cache rides in the scan CARRY and is updated in place with a
+    # one-token scatter per layer. (Carrying it through xs/ys instead makes
+    # XLA materialize a full layer-slice copy every layer — a 64MB write per
+    # layer vs 8KB of new data; see EXPERIMENTS.md §Perf iteration 1.)
+    dt = _dtype(cfg)
+
+    def body(carry, scanned):
+        x, c, li = carry
+        lp = scanned
+        h = L.rms_norm(x, lp["attn_norm"])
+        q, k, v = L.qkv_project(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.d_head, pos[:, None], cfg.rope_theta)
+        c = dict(c)
+        if cfg.kv_quant:
+            kq, ksc = _kv_quantize(k[:, 0])
+            vq, vsc = _kv_quantize(v[:, 0])
+            c["k"] = c["k"].at[li, batch_ix, pos].set(kq)
+            c["v"] = c["v"].at[li, batch_ix, pos].set(vq)
+            c["k_scale"] = c["k_scale"].at[li, batch_ix, pos].set(ksc)
+            c["v_scale"] = c["v_scale"].at[li, batch_ix, pos].set(vsc)
+            k_read = _kv_dequantize(c["k"][li], c["k_scale"][li], dt)
+            v_read = _kv_dequantize(c["v"][li], c["v_scale"][li], dt)
+        else:
+            c["k"] = c["k"].at[li, batch_ix, pos].set(k[:, 0])
+            c["v"] = c["v"].at[li, batch_ix, pos].set(v[:, 0])
+            k_read, v_read = c["k"][li], c["v"][li]
+        o = L.decode_attention(q, k_read, v_read, kv_len=pos + 1)
+        x = x + o.reshape(b, 1, -1) @ lp["attn"]["wo"]
+        h = L.rms_norm(x, lp["mlp_norm"])
+        if cfg.moe is not None:
+            y, _ = moe_lib.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = L.swiglu_apply(lp["mlp"], h)
+        return (x + y, c, li + 1), None
+
+    (x, cache, _), _ = jax.lax.scan(
+        body, (x, dict(cache), jnp.zeros((), jnp.int32)),
+        params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = _mask_padded_vocab((x @ head)[:, 0, :], cfg)
+    return logits, cache
+
+
+def make_train_step(cfg: LMConfig, optimizer):
+    """Returns f(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg), has_aux=True)(params, batch)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+    return step

@@ -1,0 +1,445 @@
+"""Static analyzer for optimized (SPMD-partitioned, per-device) HLO text.
+
+Why: ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes by ~n_layers x, and it
+reports no collective traffic at all. This walker:
+
+  1. splits the module into computations,
+  2. builds a call graph (fusion calls, while bodies x trip count,
+     conditionals, calls),
+  3. counts dot/convolution FLOPs from shapes + contracting dims,
+  4. counts per-op bytes (operands + result via a per-computation symbol
+     table; fusions counted as one pass over their boundary),
+  5. sums collective bytes per primitive with ring-model per-device link
+     bytes (all-reduce 2(g-1)/g, gather/scatter (g-1)/g, group size g from
+     replica_groups).
+
+Trip counts come from the max integer constant in a while's condition
+computation (exactly the scan length for lax.scan) with an optional
+caller-supplied default.
+
+All shapes in partitioned HLO are PER-DEVICE shapes, so every number this
+module emits is per-device — which is what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.hw import DTYPE_BYTES
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=%?([\w\.\-{}, %]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that move no data themselves (control flow / aliasing / metadata):
+# counting their (often tuple-of-everything) operands would dominate the
+# byte totals with fictional traffic.
+_NO_BYTES_OPS = frozenset({
+    "tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+    "while", "conditional", "call", "after-all", "add-dependency", "domain",
+    "opt-barrier", "partition-id", "replica-id", "rng-get-and-update-state",
+    "all-gather-done", "all-reduce-done", "async-done", "copy-done",
+    # dtype converts: the XLA *CPU* backend legalizes bf16 by upcasting whole
+    # tensors to f32; on the TPU target these converts do not exist (MXU/VPU
+    # take bf16 natively) or fuse into neighbours. Their traffic is an
+    # artifact, and neighbours already count the buffers once each.
+    "convert",
+})
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string, incl. tuples: '(f32[2,3], bf16[4])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    shape_str: str          # result shape
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]              # param name -> shape str
+    ops: List[OpInfo]
+
+    def symbol_shapes(self) -> Dict[str, str]:
+        table = dict(self.params)
+        for op in self.ops:
+            table[op.name] = op.shape_str
+        return table
+
+
+_COMP_HEAD_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((?P<params>.*)\)\s*->", re.M)
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split on commas at bracket depth 0 ((), [], {})."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    out.append(s[start:])
+    return [x for x in (y.strip() for y in out) if x]
+
+
+def _parse_rhs(rhs: str) -> Optional[Tuple[str, str]]:
+    """'SHAPE opcode(...)' -> (shape_str, opcode). Handles tuple shapes with
+    embedded /*index=N*/ comments via paren matching."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rhs[:i + 1]
+                    m = re.match(r"\s*([\w\-]+)", rhs[i + 1:])
+                    return (shape, m.group(1)) if m else None
+        return None
+    m = re.match(r"([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+([\w\-]+)", rhs)
+    return (m.group(1), m.group(2)) if m else None
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        m = _COMP_HEAD_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            params = {}
+            for p in _split_top_level(m.group("params")):
+                if ":" in p:
+                    pname, pshape = p.split(":", 1)
+                    params[pname.strip().lstrip("%")] = pshape.strip()
+            cur = Computation(m.group(2), params, [])
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        parsed = _parse_rhs(om.group(2))
+        if parsed is None:
+            continue
+        cur.ops.append(OpInfo(om.group(1), parsed[0], parsed[1], line))
+    return comps, entry
+
+
+def _dot_flops(op: OpInfo, symbols: Dict[str, str]) -> float:
+    out_elems = 1
+    m = _SHAPE_RE.search(op.shape_str)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    for d in dims:
+        out_elems *= d
+    lhs_m = re.search(r"dot\(%?([\w\.\-]+)", op.line)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not lhs_m or not cm:
+        return 2.0 * out_elems  # degenerate
+    lhs_shape = symbols.get(lhs_m.group(1), "")
+    sm = _SHAPE_RE.search(lhs_shape)
+    if not sm:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    k = 1
+    for ci in cm.group(1).split(","):
+        if ci != "" and int(ci) < len(lhs_dims):
+            k *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: OpInfo, symbols: Dict[str, str]) -> float:
+    out = shape_bytes(op.shape_str)  # rough: bytes ~ elems x dt
+    m = re.search(r"dim_labels=\S+", op.line)
+    # approximation: 2 * out_elems * kernel_elems_per_output; use kernel size
+    km = re.search(r"convolution\(%?([\w\.\-]+), %?([\w\.\-]+)\)", op.line)
+    if not km:
+        return 0.0
+    ker = symbols.get(km.group(2), "")
+    sm = _SHAPE_RE.search(ker)
+    if not sm:
+        return 0.0
+    kdims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    kelems = 1
+    for d in kdims:
+        kelems *= d
+    om = _SHAPE_RE.search(op.shape_str)
+    oelems = 1
+    if om and om.group(2):
+        for d in om.group(2).split(","):
+            oelems *= int(d)
+    # divide double-counted output-channel dim out of kernel elems
+    return 2.0 * oelems * max(kelems // max(oelems, 1), 1) if False else 2.0 * oelems * kelems
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return n_devices
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    best = None
+    for op in cond.ops:
+        m = re.search(r"constant\((\d+)\)", op.line)
+        if m and ("s32" in op.shape_str or "s64" in op.shape_str
+                  or "u32" in op.shape_str):
+            v = int(m.group(1))
+            best = v if best is None else max(best, v)
+    return best
+
+
+@dataclasses.dataclass
+class Counts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    link_bytes: float = 0.0     # ring-model per-device bytes over links
+    n_collectives: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in COLLECTIVES})
+
+    def add(self, other: "Counts", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes_accessed += mult * other.bytes_accessed
+        self.link_bytes += mult * other.link_bytes
+        for c in COLLECTIVES:
+            self.collective_bytes[c] += mult * other.collective_bytes[c]
+            self.n_collectives[c] += int(mult * other.n_collectives[c])
+
+
+class HLOAnalysis:
+    def __init__(self, hlo_text: str, n_devices: int,
+                 default_trip: int = 1):
+        self.comps, self.entry = split_computations(hlo_text)
+        self.n_devices = n_devices
+        self.default_trip = default_trip
+        self._memo: Dict[str, Counts] = {}
+
+    def _op_counts(self, op: OpInfo, symbols: Dict[str, str]) -> Counts:
+        c = Counts()
+        opc = op.opcode
+        if opc == "dot":
+            c.flops = _dot_flops(op, symbols)
+        elif opc == "convolution":
+            c.flops = _conv_flops(op, symbols)
+        for cl in COLLECTIVES:
+            if opc == cl or opc == cl + "-start":
+                size = shape_bytes(op.shape_str)
+                g = _group_size(op.line, self.n_devices)
+                c.collective_bytes[cl] += size
+                c.n_collectives[cl] += 1
+                if g > 1:
+                    if cl == "all-reduce":
+                        c.link_bytes += 2.0 * (g - 1) / g * size
+                    elif cl in ("all-gather", "all-to-all"):
+                        c.link_bytes += (g - 1) / g * size
+                    elif cl == "reduce-scatter":
+                        c.link_bytes += (g - 1) * size  # input = g x result
+                    else:  # collective-permute
+                        c.link_bytes += size
+                break
+        c.bytes_accessed = self._op_bytes(op, symbols)
+        return c
+
+    def _op_bytes(self, op: OpInfo, symbols: Dict[str, str]) -> float:
+        """Traffic model per op. Slicing/indexed ops move only the touched
+        region (XLA aliases the big buffer): a scan's per-layer cache
+        dynamic-slice reads L x (1/L of the cache), not L x the cache."""
+        opc = op.opcode
+        if opc in _NO_BYTES_OPS or opc == "fusion":
+            return 0.0  # fusion handled at the call site (boundary model)
+        res = shape_bytes(op.shape_str)
+        rhs = op.line.split("=", 1)[1].split(" metadata=")[0]
+        refs = [r for r in re.findall(r"%([\w\.\-]+)", rhs) if r in symbols]
+        if opc in ("dynamic-slice",):
+            return 2.0 * res
+        if opc in ("dynamic-update-slice",):
+            upd = shape_bytes(symbols[refs[1]]) if len(refs) > 1 else res
+            return 2.0 * upd
+        if opc == "gather":
+            idx = shape_bytes(symbols[refs[1]]) if len(refs) > 1 else 0
+            return 2.0 * res + idx
+        if opc == "scatter":
+            upd = shape_bytes(symbols[refs[2]]) if len(refs) > 2 else res
+            idx = shape_bytes(symbols[refs[1]]) if len(refs) > 1 else 0
+            return 2.0 * upd + idx
+        return res + sum(shape_bytes(symbols[r]) for r in refs)
+
+    def _fusion_bytes(self, comp: Computation) -> float:
+        """Boundary traffic of a fused computation, alias-aware:
+        - a parameter consumed ONLY by dynamic-slice/gather (possibly through
+          a convert) contributes the sliced sizes, not its full size (scan
+          reading one layer's weights / cache slice per iteration);
+        - if the fusion performs dynamic-update-slice(s), the aliased target
+          buffers contribute nothing and the writes count as 2 x update size
+          (in-place semantics), regardless of a trailing convert at the root."""
+        symbols = comp.symbol_shapes()
+        uses: Dict[str, List[OpInfo]] = {}
+        refs_of: Dict[str, List[str]] = {}
+        for op in comp.ops:
+            rhs = op.line.split("=", 1)[1].split(" metadata=")[0]
+            refs = re.findall(r"%([\w\.\-]+)", rhs)
+            refs_of[op.name] = refs
+            for r in refs:
+                uses.setdefault(r, []).append(op)
+
+        # pure dtype-legalization fusions (convert/bitcast/copy only): free
+        # on the TPU target (see _NO_BYTES_OPS note on convert)
+        if comp.ops and all(o.opcode in ("convert", "bitcast", "copy",
+                                         "parameter")
+                            for o in comp.ops):
+            return 0.0
+
+        dus_ops = [op for op in comp.ops
+                   if op.opcode in ("dynamic-update-slice", "scatter")]
+        aliased = set()
+        for op in dus_ops:
+            refs = refs_of.get(op.name, [])
+            if refs:
+                tgt = refs[0]
+                # follow converts back to a parameter
+                while tgt not in comp.params and tgt in refs_of and \
+                        len(refs_of[tgt]) == 1:
+                    tgt = refs_of[tgt][0]
+                aliased.add(tgt)
+
+        def sliced_only(p: str) -> Optional[float]:
+            """If p is consumed only via ds/gather (1 convert hop allowed),
+            return total sliced bytes, else None."""
+            total = 0.0
+            stack = [p]
+            seen = set()
+            while stack:
+                cur = stack.pop()
+                if cur in seen:
+                    continue
+                seen.add(cur)
+                for op in uses.get(cur, []):
+                    if op.opcode in ("dynamic-slice", "gather"):
+                        total += shape_bytes(op.shape_str)
+                    elif op.opcode in ("convert", "bitcast", "copy"):
+                        stack.append(op.name)
+                    elif op.opcode == "dynamic-update-slice":
+                        if refs_of.get(op.name, [""])[0] == cur:
+                            continue  # aliased target: free
+                        return None
+                    else:
+                        return None
+            return total
+
+        total = 0.0
+        for p, pshape in comp.params.items():
+            if p in aliased:
+                continue
+            s = sliced_only(p)
+            total += shape_bytes(pshape) if s is None else s
+        if dus_ops:
+            for op in dus_ops:
+                refs = refs_of.get(op.name, [])
+                ui = 2 if op.opcode == "scatter" else 1  # update operand pos
+                upd = symbols.get(refs[ui], op.shape_str) if len(refs) > ui \
+                    else op.shape_str
+                total += 2.0 * shape_bytes(upd)
+        elif comp.ops:
+            total += shape_bytes(comp.ops[-1].shape_str)
+        return total
+
+    def computation_counts(self, name: str) -> Counts:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Counts()
+        self._memo[name] = total  # guard cycles
+        if comp is None:
+            return total
+        symbols = comp.symbol_shapes()
+        for op in comp.ops:
+            total.add(self._op_counts(op, symbols))
+            line = op.line
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", line)
+                if m:
+                    sub = self.computation_counts(m.group(1))
+                    # descend for flops/collectives; bytes = alias-aware
+                    # boundary traffic of the fused computation
+                    fc = Counts()
+                    fc.flops = sub.flops
+                    fc.link_bytes = sub.link_bytes
+                    fc.collective_bytes = dict(sub.collective_bytes)
+                    fc.n_collectives = dict(sub.n_collectives)
+                    called = self.comps.get(m.group(1))
+                    if called is not None:
+                        fc.bytes_accessed = self._fusion_bytes(called)
+                    total.add(fc)
+            elif op.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                trip = self.default_trip
+                if cm and cm.group(1) in self.comps:
+                    t = _trip_count(self.comps[cm.group(1)])
+                    if t:
+                        trip = t
+                if bm:
+                    total.add(self.computation_counts(bm.group(1)), trip)
+            elif op.opcode in ("call", "async-start"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+                if m:
+                    total.add(self.computation_counts(m.group(1)))
+            elif op.opcode == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if m:
+                    branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+                    subs = [self.computation_counts(b) for b in branches]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops + s.bytes_accessed)
+                        total.add(best)
+        return total
+
+    def totals(self) -> Counts:
+        return self.computation_counts(self.entry)
+
+
+def analyze(hlo_text: str, n_devices: int, default_trip: int = 1) -> Counts:
+    return HLOAnalysis(hlo_text, n_devices, default_trip).totals()

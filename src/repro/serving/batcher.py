@@ -1,0 +1,97 @@
+"""Micro-batching request queue for the reranking service.
+
+The paper's TSimpleServer scores one request at a time; a production
+deployment amortizes dispatch by coalescing concurrent requests into
+bucketed batches (Table 1 shows 8-30x per-pair speedup at batch 64). This
+batcher implements the standard policy: collect up to ``max_batch`` requests
+or wait at most ``max_wait_s``, pad to the scorer's bucket, scatter results
+back to per-request futures.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class _Item:
+    __slots__ = ("q_tok", "a_tok", "feats", "future")
+
+    def __init__(self, q_tok, a_tok, feats):
+        self.q_tok = q_tok
+        self.a_tok = a_tok
+        self.feats = feats
+        self.future: "Future[float]" = Future()
+
+
+class MicroBatcher:
+    """Coalesce get_score requests into scorer batches on a worker thread."""
+
+    def __init__(self, scorer, max_batch: int = 64, max_wait_s: float = 0.002):
+        self.scorer = scorer
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._q: "queue.Queue[Optional[_Item]]" = queue.Queue()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._running = True
+        self._thread.start()
+        self.batch_sizes: List[int] = []
+
+    def submit(self, q_tok: np.ndarray, a_tok: np.ndarray,
+               feats: np.ndarray) -> "Future[float]":
+        item = _Item(q_tok, a_tok, feats)
+        self._q.put(item)
+        return item.future
+
+    def score(self, q_tok, a_tok, feats) -> float:
+        return self.submit(q_tok, a_tok, feats).result()
+
+    def _drain(self) -> List[_Item]:
+        try:
+            first = self._q.get(timeout=0.1)
+        except queue.Empty:
+            return []
+        if first is None:
+            return []
+        items = [first]
+        deadline = self.max_wait_s
+        import time
+        t0 = time.perf_counter()
+        while len(items) < self.max_batch:
+            remaining = deadline - (time.perf_counter() - t0)
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._q.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if nxt is None:
+                break
+            items.append(nxt)
+        return items
+
+    def _loop(self):
+        while self._running:
+            items = self._drain()
+            if not items:
+                continue
+            try:
+                q = np.stack([i.q_tok for i in items])
+                a = np.stack([i.a_tok for i in items])
+                f = np.stack([i.feats for i in items])
+                scores = self.scorer(q, a, f)
+                self.batch_sizes.append(len(items))
+                for i, s in zip(items, scores):
+                    i.future.set_result(float(s))
+            except Exception as e:  # noqa: BLE001 — propagate to callers
+                for i in items:
+                    if not i.future.done():
+                        i.future.set_exception(e)
+
+    def stop(self):
+        self._running = False
+        self._q.put(None)
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,51 @@
+"""ServingEngine: the batcher + tracker wrapped behind the paper's
+``getScore`` interface, pluggable into core.service as a drop-in handler."""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import HashingTokenizer, overlap_features
+from repro.serving.batcher import MicroBatcher
+from repro.serving.stats import LatencyTracker
+
+
+class ServingEngine:
+    def __init__(self, scorer, tokenizer: HashingTokenizer,
+                 idf: Dict[str, float], max_len: int,
+                 max_batch: int = 64, max_wait_s: float = 0.002):
+        self.tok = tokenizer
+        self.idf = idf
+        self.max_len = max_len
+        self.batcher = MicroBatcher(scorer, max_batch, max_wait_s)
+        self.tracker = LatencyTracker()
+
+    def _featurize(self, question: str, answer: str):
+        q_tok = np.asarray(self.tok.encode(question, self.max_len), np.int32)
+        a_tok = np.asarray(self.tok.encode(answer, self.max_len), np.int32)
+        feats = overlap_features(self.tok.words(question),
+                                 self.tok.words(answer), self.idf)
+        return q_tok, a_tok, feats
+
+    def get_score(self, question: str, answer: str) -> float:
+        import time
+        t0 = time.perf_counter()
+        fut = self.batcher.submit(*self._featurize(question, answer))
+        out = fut.result()
+        self.tracker.observe(time.perf_counter() - t0)
+        return out
+
+    def get_scores(self, pairs: Sequence[Tuple[str, str]]) -> np.ndarray:
+        """service.QuestionAnsweringHandler-compatible batch entry point."""
+        futs = [self.batcher.submit(*self._featurize(q, a)) for q, a in pairs]
+        return np.asarray([f.result() for f in futs])
+
+    def stats(self) -> Dict[str, float]:
+        s = self.tracker.summary()
+        sizes = self.batcher.batch_sizes
+        s["mean_batch"] = float(np.mean(sizes)) if sizes else 0.0
+        return s
+
+    def stop(self):
+        self.batcher.stop()

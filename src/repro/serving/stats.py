@@ -1,0 +1,32 @@
+"""Serving-side latency/throughput accounting (the paper's Table 2 columns)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+
+class LatencyTracker:
+    def __init__(self):
+        self._samples: List[float] = []
+        self._started = time.perf_counter()
+        self._count = 0
+
+    def observe(self, seconds: float, n: int = 1):
+        self._samples.append(seconds)
+        self._count += n
+
+    def percentile(self, q: float) -> float:
+        if not self._samples:
+            return 0.0
+        xs = sorted(self._samples)
+        return xs[min(int(q * (len(xs) - 1)), len(xs) - 1)]
+
+    def summary(self) -> Dict[str, float]:
+        elapsed = max(time.perf_counter() - self._started, 1e-9)
+        return {
+            "count": float(self._count),
+            "qps": self._count / elapsed,
+            "p50_ms": self.percentile(0.50) * 1e3,
+            "p90_ms": self.percentile(0.90) * 1e3,
+            "p99_ms": self.percentile(0.99) * 1e3,
+        }

@@ -1,0 +1,99 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-K retention, and
+topology-agnostic restore (resharding onto whatever mesh is alive).
+
+Checkpoints reuse the repro.core.export container (schema'd named tensors),
+so a training checkpoint is readable by the same language-agnostic tooling
+as a serving export. State is pulled to host (fully-replicated numpy) before
+writing — restore can therefore re-shard onto any mesh shape (elastic
+scaling across restarts; see training.fault_tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import export as export_lib
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, params: Any, opt_state: Any = None,
+             extra: Optional[Dict] = None) -> str:
+        """Atomic: write to tmp dir then rename; prune to keep-K."""
+        name = f"ckpt_{step:010d}"
+        final = os.path.join(self.directory, name)
+        if os.path.exists(os.path.join(final, "meta.json")):
+            return final  # idempotent: this step is already published
+        tmp = tempfile.mkdtemp(prefix=name + ".tmp", dir=self.directory)
+        try:
+            host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), params)
+            export_lib.save(os.path.join(tmp, "params.rpro"), host,
+                            model="checkpoint", meta={"step": step})
+            if opt_state is not None:
+                host_o = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                      opt_state)
+                export_lib.save(os.path.join(tmp, "opt.rpro"), host_o,
+                                model="opt_state", meta={"step": step})
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"step": step, "time": time.time(),
+                           "extra": extra or {}}, f)
+            os.replace(tmp, final)  # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._prune()
+        return final
+
+    def _prune(self):
+        ckpts = self.list_steps()
+        for step in ckpts[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"ckpt_{step:010d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def list_steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            m = re.fullmatch(r"ckpt_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.directory, d, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, params_template: Any, opt_template: Any = None,
+                step: Optional[int] = None, shardings: Any = None
+                ) -> Tuple[Any, Any, int]:
+        """Restore into templates; optionally placing with NEW shardings
+        (elastic restore onto a different mesh)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"ckpt_{step:010d}")
+        flat, _ = export_lib.load(os.path.join(d, "params.rpro"))
+        params = export_lib.restore_into(params_template, flat)
+        opt_state = None
+        if opt_template is not None:
+            flat_o, _ = export_lib.load(os.path.join(d, "opt.rpro"))
+            opt_state = export_lib.restore_into(opt_template, flat_o)
+        if shardings is not None:
+            params = jax.device_put(params, shardings)
+        return params, opt_state, step

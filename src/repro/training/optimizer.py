@@ -1,0 +1,136 @@
+"""Pure-JAX optimizers (optax-like minimal core, built in-repo per scope rule).
+
+Mixed-precision discipline: if params are low-precision (bf16), the optimizer
+keeps fp32 master copies + moments in its state and casts back each step —
+the production TPU training recipe. Schedules are step-indexed functions
+stored in the state as a counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (params, grads, st)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup: int, total: int,
+                           floor: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# gradient transforms
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+                        tree), g
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(f32, params),
+            "nu": jax.tree.map(f32, params),
+            # fp32 master copies (mixed precision); explicit copy so the
+            # master never aliases the param buffer (donation safety)
+            "master": jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+        }
+
+    def update(params, grads, st):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = st["step"] + 1
+        lr_t = sched(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, g, p32):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p32
+            return m, v, p32 - lr_t * u
+
+        flat_m, tdef = jax.tree.flatten(st["mu"])
+        flat_v = jax.tree.leaves(st["nu"])
+        flat_g = jax.tree.leaves(grads)
+        flat_p = jax.tree.leaves(st["master"])
+        out = [upd(m, v, g, p) for m, v, g, p in
+               zip(flat_m, flat_v, flat_g, flat_p)]
+        mu = jax.tree.unflatten(tdef, [o[0] for o in out])
+        nu = jax.tree.unflatten(tdef, [o[1] for o in out])
+        master = jax.tree.unflatten(tdef, [o[2] for o in out])
+        new_params = jax.tree.map(lambda p32, p: p32.astype(p.dtype),
+                                  master, params)
+        return new_params, {"step": step, "mu": mu, "nu": nu, "master": master}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.9,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "vel": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "master": jax.tree.map(lambda p: p.astype(jnp.float32), params)}
+
+    def update(params, grads, st):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = st["step"] + 1
+        lr_t = sched(step)
+        vel = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32),
+                           st["vel"], grads)
+        master = jax.tree.map(lambda p, v: p - lr_t * v, st["master"], vel)
+        new_params = jax.tree.map(lambda p32, p: p32.astype(p.dtype), master, params)
+        return new_params, {"step": step, "vel": vel, "master": master}
+
+    return Optimizer(init, update)

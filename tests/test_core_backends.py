@@ -1,0 +1,83 @@
+"""The paper's core claim surface: every integration backend computes the
+same scores; export round-trips; the compiled artifact runs without code."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import backends as BK
+from repro.core import compiled_artifact as CA
+from repro.core import export as E
+from repro.core import numpy_eval as NE
+from repro.models import sm_cnn
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("sm-cnn"))
+    params = sm_cnn.init_sm_cnn(KEY, cfg)
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, cfg.vocab_size, (8, cfg.max_len)).astype(np.int32)
+    a = rng.integers(0, cfg.vocab_size, (8, cfg.max_len)).astype(np.int32)
+    f = rng.random((8, 4), np.float32)
+    ref = np.asarray(sm_cnn.score(params, q, a, f, cfg))
+    return cfg, params, q, a, f, ref
+
+
+@pytest.mark.parametrize("backend", ["eager", "jit", "aot", "numpy",
+                                     "artifact", "pallas"])
+def test_backend_agreement(setup, backend):
+    cfg, params, q, a, f, ref = setup
+    scorer = BK.make_scorer(backend, params, cfg, buckets=(8, 64))
+    out = scorer(q, a, f)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_backend_padding_buckets(setup):
+    cfg, params, q, a, f, ref = setup
+    scorer = BK.make_scorer("aot", params, cfg, buckets=(8, 64))
+    out = scorer(q[:3], a[:3], f[:3])   # 3 -> padded to bucket 8
+    np.testing.assert_allclose(out, ref[:3], rtol=1e-5, atol=1e-6)
+
+
+def test_export_roundtrip(setup):
+    cfg, params, q, a, f, ref = setup
+    blob = E.dumps(params, model=cfg.name, meta={"filter_width": cfg.filter_width})
+    flat, header = E.loads(blob)
+    assert header["model"] == cfg.name
+    p2 = E.restore_into(params, flat)
+    out = np.asarray(sm_cnn.score(p2, q, a, f, cfg))
+    np.testing.assert_allclose(out, ref, rtol=0, atol=0)
+
+
+def test_export_rejects_bad_magic():
+    with pytest.raises(ValueError, match="magic"):
+        E.loads(b"NOTAFILE" + b"\x00" * 64)
+
+
+def test_numpy_eval_naive_matches_gemm(setup):
+    cfg, params, q, a, f, ref = setup
+    blob = E.dumps(params, meta={"filter_width": cfg.filter_width})
+    ev = NE.NumpySMCNN.from_bytes(blob)
+    fast = ev.get_score(q[:2], a[:2], f[:2])
+    naive = ev.get_score(q[:2], a[:2], f[:2], naive=True)
+    np.testing.assert_allclose(fast, naive, rtol=1e-5, atol=1e-6)
+
+
+def test_compiled_artifact_is_standalone(setup):
+    """The artifact must run through bytes alone (the 'single binary')."""
+    cfg, params, q, a, f, ref = setup
+    import jax.numpy as jnp
+    frozen = jax.tree.map(jnp.asarray, params)
+    blob = CA.build_artifact(
+        lambda qq, aa, ff: sm_cnn.score(frozen, qq, aa, ff, cfg),
+        {"b8": (jax.ShapeDtypeStruct((8, cfg.max_len), jnp.int32),
+                jax.ShapeDtypeStruct((8, cfg.max_len), jnp.int32),
+                jax.ShapeDtypeStruct((8, 4), jnp.float32))},
+        meta={"model": cfg.name})
+    art = CA.CompiledArtifact.from_bytes(blob)
+    assert art.shape_keys == ["b8"]
+    out = np.asarray(art.call("b8", q, a, f.astype(np.float32)))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)

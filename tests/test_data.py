@@ -1,0 +1,81 @@
+"""Data-pipeline tests: QA corpus, neighbor sampler, recsys generators."""
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data import graph as G
+from repro.data import lm as lm_data
+from repro.data import qa as QA
+from repro.data import recsys as rec_data
+from repro.data.tokenizer import HashingTokenizer, overlap_features
+
+
+def test_corpus_deterministic():
+    c1 = QA.generate_corpus(n_docs=20, n_questions=5, seed=11)
+    c2 = QA.generate_corpus(n_docs=20, n_questions=5, seed=11)
+    assert c1.questions == c2.questions
+    assert c1.documents == c2.documents
+
+
+def test_pairs_have_positives_and_negatives():
+    c = QA.generate_corpus(n_docs=30, n_questions=10, seed=1)
+    labels = [p[3] for p in c.pairs]
+    assert 0 < sum(labels) < len(labels)
+
+
+def test_overlap_features_range():
+    idf = {"foo": 2.0, "bar": 1.0}
+    f = overlap_features(["foo", "bar", "the"], ["foo", "baz"], idf)
+    assert f.shape == (4,)
+    assert np.all(f >= 0) and np.all(f <= 1.0 + 1e-6)
+    # identical sentences -> full overlap
+    f2 = overlap_features(["foo", "bar"], ["foo", "bar"], idf)
+    assert f2[0] == 1.0 and f2[1] == 1.0
+
+
+def test_neighbor_sampler_validity():
+    g = G.random_graph(2000, 10, seed=3)
+    ns = G.NeighborSampler(g, (15, 10), seed=0)
+    sub = ns.sample(np.arange(32), pad_nodes=8192, pad_edges=16384)
+    n = int(sub["node_mask"].sum())
+    e = int(sub["edge_mask"].sum())
+    assert 32 <= n <= 32 * (1 + 15 + 150)
+    assert e <= 32 * (15 + 150)
+    # all real edges reference real (unpadded) nodes
+    assert sub["senders"][:e].max() < n
+    assert sub["receivers"][:e].max() < n
+    # padded tail is zeros
+    assert np.all(sub["senders"][e:] == 0)
+
+
+def test_mesh_graph_degrees():
+    g = G.mesh_graph(5)
+    degs = np.diff(g.indptr)
+    assert degs.min() == 2 and degs.max() == 4  # corners=2, interior=4
+    s, r = G.to_edge_list(g)
+    assert len(s) == g.n_edges
+
+
+def test_recsys_batches_respect_vocabs():
+    for arch in ("fm", "dlrm-mlperf", "din", "bert4rec"):
+        cfg = reduced(get_config(arch))
+        b = rec_data.batch_for(cfg, 32, seed=5)
+        if "ids" in b:
+            vocabs = np.asarray(cfg.vocab_sizes)
+            assert np.all(b["ids"] < vocabs[None, :])
+            assert np.all(b["ids"] >= 0)
+        if "hist" in b:
+            assert b["hist"].max() < cfg.n_items
+        if "negatives" in b:
+            assert b["negatives"].shape == (32, cfg.n_negatives)
+
+
+def test_lm_token_stream_shapes():
+    it = lm_data.token_batches(vocab_size=100, batch=4, seq_len=16)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16)
+    assert b["labels"].shape == (4, 16)
+    assert b["tokens"].max() < 100
+    # labels are next-token shifted
+    it2 = lm_data.token_batches(vocab_size=100, batch=4, seq_len=16)
+    b2 = next(it2)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b2["labels"][:, :-1])

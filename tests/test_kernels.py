@@ -1,0 +1,76 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,s,d,w,f", [
+    (8, 64, 50, 5, 100),    # the paper's config
+    (4, 16, 8, 3, 12),
+    (16, 32, 16, 7, 32),
+    (2, 8, 4, 2, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_tanh_maxpool(b, s, d, w, f, dtype):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (b, s, d), dtype)
+    filt = (jax.random.normal(ks[1], (w * d, f), jnp.float32) * 0.1).astype(dtype)
+    bias = (jax.random.normal(ks[2], (f,), jnp.float32) * 0.1).astype(dtype)
+    out = ops.conv_tanh_maxpool(x, filt, bias, w, interpret=True)
+    r = ref.conv_tanh_maxpool_ref(x, filt, bias, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(jnp.float32), r.astype(jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("v,d,b,l", [(100, 16, 8, 4), (1000, 32, 16, 10),
+                                     (64, 8, 4, 1)])
+@pytest.mark.parametrize("weighted", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag(v, d, b, l, weighted, dtype):
+    t = jax.random.normal(KEY, (v, d), dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (b, l), 0, v)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (b, l)) if weighted else None
+    out = ops.embedding_bag(t, ids, w, interpret=True)
+    r = ref.embedding_bag_ref(t, ids, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out.astype(jnp.float32), r.astype(jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d,bq,bk", [
+    (2, 128, 8, 4, 32, 32, 32),
+    (1, 64, 4, 1, 16, 16, 32),   # MQA
+    (2, 256, 4, 2, 64, 64, 64),
+    (1, 128, 8, 8, 64, 128, 128),  # MHA, single tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, s, h, hkv, d, bq, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_kv=bk, interpret=True)
+    r = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out.astype(jnp.float32), r.astype(jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_sm_cnn_pallas_backend_matches_model():
+    from repro.configs import get_config, reduced
+    from repro.models import sm_cnn
+    cfg = reduced(get_config("sm-cnn"))
+    params = sm_cnn.init_sm_cnn(KEY, cfg)
+    q = jax.random.randint(KEY, (8, cfg.max_len), 0, cfg.vocab_size)
+    a = jax.random.randint(jax.random.PRNGKey(1), (8, cfg.max_len), 0,
+                           cfg.vocab_size)
+    f = jax.random.uniform(jax.random.PRNGKey(2), (8, cfg.n_extra_feats))
+    r = sm_cnn.score(params, q, a, f, cfg)
+    out = ops.sm_cnn_score(params, q, a, f, cfg, interpret=True)
+    np.testing.assert_allclose(out, r, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,96 @@
+"""Unit tests: norms, RoPE, attention implementations agree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(KEY, (4, 32)) * 10
+    y = L.rms_norm(x, jnp.ones((32,)))
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layer_norm_zero_mean():
+    x = jax.random.normal(KEY, (4, 32)) * 3 + 5
+    y = L.layer_norm(x, jnp.ones((32,)), jnp.zeros((32,)))
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, -1), 1.0, rtol=1e-2)
+
+
+def test_rope_preserves_norm_and_relativity():
+    d = 32
+    q = jax.random.normal(KEY, (1, 8, 1, d))
+    cos, sin = L.rope_table(jnp.arange(8), d, 10000.0)
+    qr = L.apply_rope(q, cos, sin)
+    np.testing.assert_allclose(jnp.linalg.norm(qr, axis=-1),
+                               jnp.linalg.norm(q, axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 1, d))
+    kr = L.apply_rope(k, cos, sin)
+    d02 = jnp.dot(qr[0, 0, 0], kr[0, 2, 0])
+    cos2, sin2 = L.rope_table(jnp.arange(3, 11), d, 10000.0)  # same len, +3
+    qr2 = L.apply_rope(q, cos2, sin2)
+    kr2 = L.apply_rope(k, cos2, sin2)
+    d35 = jnp.dot(qr2[0, 0, 0], kr2[0, 2, 0])
+    np.testing.assert_allclose(d02, d35, rtol=1e-4)
+
+
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+def test_chunked_matches_full(hkv):
+    b, s, h, d = 2, 64, 4, 16
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    full = L.causal_attention(q, k, v, chunk=s)
+    chunked = L.causal_attention(q, k, v, chunk=16)
+    np.testing.assert_allclose(full, chunked, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("hkv,ck", [(2, 16), (4, 32), (1, 64)])
+def test_flash_matches_chunked(hkv, ck):
+    b, s, h, d = 2, 64, 4, 16
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    ref = L.causal_attention(q, k, v, chunk=s)
+    out = L.flash_attention_jnp(q, k, v, ck)
+    np.testing.assert_allclose(ref, out, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_custom_vjp_matches_autodiff_of_reference():
+    b, s, h, hkv, d = 1, 32, 4, 2, 16
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    g_ref = jax.grad(lambda *a: jnp.sum(L.causal_attention(*a, chunk=s) ** 2),
+                     argnums=(0, 1, 2))(q, k, v)
+    g_fl = jax.grad(lambda *a: jnp.sum(L.flash_attention_jnp(*a, 16) ** 2),
+                    argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g_ref, g_fl):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_matches_full_attention_last_token():
+    b, s, h, hkv, d = 2, 16, 4, 2, 8
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, d))
+    full = L.causal_attention(q, k, v, chunk=s)
+    dec = L.decode_attention(q[:, -1:], k, v,
+                             kv_len=jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(full[:, -1:], dec, rtol=1e-5, atol=1e-5)
+
+
+def test_cross_entropy_matches_naive():
+    logits = jax.random.normal(KEY, (4, 8, 50))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 50)
+    ce = L.cross_entropy(logits, labels)
+    naive = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(logits, -1), labels[..., None], axis=-1))
+    np.testing.assert_allclose(ce, naive, rtol=1e-5)

@@ -1,0 +1,99 @@
+"""Multi-stage ranking: BM25, cascade, cutoff, end-to-end QA quality."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import backends as BK
+from repro.core import bm25 as BM
+from repro.core import pipeline as PL
+from repro.data import qa as QA
+from repro.data.tokenizer import HashingTokenizer
+from repro.models import sm_cnn
+from repro.training.optimizer import adamw
+from repro.training.train_loop import Trainer
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_config("sm-cnn"))
+    corpus = QA.generate_corpus(n_docs=60, n_questions=40, seed=7)
+    tok = HashingTokenizer(cfg.vocab_size)
+    docs_tokens = [tok.encode(" ".join(d)) for d in corpus.documents]
+    index = BM.build_index(docs_tokens, cfg.vocab_size)
+    return cfg, corpus, tok, index
+
+
+def test_bm25_self_retrieval(world):
+    """A document's own text must retrieve that document first."""
+    cfg, corpus, tok, index = world
+    hits = 0
+    for di in range(10):
+        text = " ".join(corpus.documents[di])
+        scores, ids = BM.retrieve(index, tok.encode(text), h=3)
+        hits += int(ids[0] == di)
+    assert hits >= 9
+
+
+def test_bm25_scores_sorted_and_nonnegative(world):
+    cfg, corpus, tok, index = world
+    scores, ids = BM.retrieve(index, tok.encode(corpus.questions[0]), h=10)
+    assert np.all(np.diff(scores) <= 1e-6)
+    assert np.all(scores >= 0)
+
+
+def test_cutoff_stage_prunes_but_keeps_top(world):
+    cands = [PL.Candidate(i, 0, f"c{i}", s)
+             for i, s in enumerate([10.0, 9.9, 3.0, 2.0, 1.0, 0.5])]
+    out = PL.CutoffStage(margin=2.0, min_keep=2).run("q", cands)
+    kept = [c.doc_id for c in out]
+    assert kept[:2] == [0, 1]
+    assert len(out) < len(cands)
+
+
+def test_end_to_end_answer_quality(world):
+    """Train the reranker briefly; the pipeline must rank a true answer
+    sentence (same subject entity) first for most questions."""
+    cfg, corpus, tok, index = world
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    opt = adamw(3e-3)
+    tr = Trainer(functools.partial(sm_cnn.loss_fn, cfg=cfg), opt, params)
+    def stream():
+        ep = 0
+        while True:
+            yield from QA.pair_batches(corpus, tok, cfg.max_len, 64, seed=ep)
+            ep += 1
+    tr.run(stream(), max_steps=80, log_every=0)
+
+    scorer = BK.make_scorer("jit", tr.params, cfg, buckets=(64, 256, 1024))
+    ranker = PL.MultiStageRanker([
+        PL.RetrievalStage(index, corpus.documents, tok, h=10),
+        PL.RerankStage(scorer, tok, corpus.idf, cfg.max_len, k=3),
+    ])
+    hits = total = 0
+    for qi in range(12):
+        q = corpus.questions[qi]
+        subject = q.split()[-1]
+        final, _ = ranker.run(q)
+        if not final:
+            continue
+        total += 1
+        hits += int(any(subject in c.text.split() for c in final[:3]))
+    assert total >= 10
+    assert hits / total >= 0.6, f"top-3 hit rate {hits}/{total}"
+
+
+def test_stage_latency_accounting(world):
+    cfg, corpus, tok, index = world
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(64, 256, 1024))
+    ranker = PL.MultiStageRanker([
+        PL.RetrievalStage(index, corpus.documents, tok, h=5),
+        PL.RerankStage(scorer, tok, corpus.idf, cfg.max_len, k=5),
+    ])
+    _, trace = ranker.run(corpus.questions[0])
+    assert len(trace) == 2
+    assert all(t.latency_s >= 0 for t in trace)
+    assert trace[0].name.startswith("bm25")

@@ -1,0 +1,127 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import export as E
+from repro.core import wire
+from repro.data.tokenizer import HashingTokenizer
+from repro.training import compression as C
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+# --- export: arbitrary tensor dicts round-trip exactly ----------------------
+
+@st.composite
+def tensor_dicts(draw):
+    n = draw(st.integers(1, 4))
+    out = {}
+    for i in range(n):
+        name = draw(st.text(alphabet="abcdefgh/_", min_size=1, max_size=12)) + str(i)
+        shape = tuple(draw(st.lists(st.integers(1, 5), min_size=0, max_size=3)))
+        dtype = draw(st.sampled_from([np.float32, np.int32, np.float64]))
+        arr = draw(st.integers(-1000, 1000))
+        out[name] = (np.full(shape, arr) + np.arange(int(np.prod(shape)))
+                     .reshape(shape)).astype(dtype)
+    return out
+
+
+@given(tensor_dicts())
+@settings(**SETTINGS)
+def test_export_roundtrip_exact(tensors):
+    flat, header = E.loads(E.dumps(tensors, model="prop"))
+    assert set(flat) == set(tensors)
+    for k in tensors:
+        assert flat[k].dtype == tensors[k].dtype
+        assert flat[k].shape == tensors[k].shape
+        np.testing.assert_array_equal(flat[k], tensors[k])
+
+
+# --- wire protocol: arbitrary strings round-trip -----------------------------
+
+@given(st.lists(st.tuples(st.text(max_size=60), st.text(max_size=60)),
+                min_size=1, max_size=8))
+@settings(**SETTINGS)
+def test_wire_batch_roundtrip(pairs):
+    frame = wire.encode_get_score_batch(pairs)
+    assert wire.decode_request(frame[4], frame[5:]) == pairs
+
+
+@given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                          width=64), min_size=1, max_size=16))
+@settings(**SETTINGS)
+def test_wire_scores_roundtrip(scores):
+    frame = wire.encode_reply(scores)
+    out = wire.decode_reply(frame[4], frame[5:])
+    np.testing.assert_allclose(out, scores, rtol=0, atol=0)
+
+
+# --- tokenizer: deterministic, bounded, PAD-stable ---------------------------
+
+@given(st.text(max_size=200), st.integers(8, 64))
+@settings(**SETTINGS)
+def test_tokenizer_bounds_and_determinism(text, max_len):
+    tok = HashingTokenizer(1000)
+    ids1 = tok.encode(text, max_len)
+    ids2 = tok.encode(text, max_len)
+    assert ids1 == ids2
+    assert len(ids1) == max_len
+    assert all(0 <= i < 1000 for i in ids1)
+    assert all(i == tok.PAD or i >= tok.N_SPECIAL for i in ids1)
+
+
+# --- compression: single-step error bounded by one quantum -------------------
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2,
+                max_size=64))
+@settings(**SETTINGS)
+def test_compression_quantum_bound(values):
+    g = {"w": jnp.asarray(values, jnp.float32)}
+    err = C.init_error_feedback(g)
+    q, s, new_err = C.compress_with_feedback(g, err)
+    deq = C.decompress(q, s)
+    bound = float(s["w"]) / 2 + 1e-6
+    assert float(jnp.abs(deq["w"] - g["w"]).max()) <= bound
+    # the carried error equals the quantization residual exactly
+    np.testing.assert_allclose(np.asarray(new_err["w"]),
+                               np.asarray(g["w"] - deq["w"]), atol=1e-6)
+
+
+# --- cross-entropy invariances ------------------------------------------------
+
+@given(st.integers(2, 6), st.integers(3, 20))
+@settings(**SETTINGS)
+def test_cross_entropy_uniform_logits(batch, vocab):
+    from repro.models.layers import cross_entropy
+    logits = jnp.zeros((batch, 4, vocab))
+    labels = jnp.zeros((batch, 4), jnp.int32)
+    np.testing.assert_allclose(float(cross_entropy(logits, labels)),
+                               np.log(vocab), rtol=1e-5)
+
+
+@given(st.floats(-5, 5))
+@settings(**SETTINGS)
+def test_cross_entropy_shift_invariant(shift):
+    from repro.models.layers import cross_entropy
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 11)),
+                         jnp.float32)
+    labels = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    a = cross_entropy(logits, labels)
+    b = cross_entropy(logits + shift, labels)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4, atol=1e-5)
+
+
+# --- BM25: tf monotonicity ----------------------------------------------------
+
+@given(st.integers(1, 20), st.integers(21, 60))
+@settings(**SETTINGS)
+def test_bm25_tf_monotone(tf_lo, tf_hi):
+    from repro.core import bm25 as BM
+    docs = [[5] * tf_lo + [7], [5] * tf_hi + [8], [9, 10, 11]]
+    idx = BM.build_index(docs, vocab_size=16)
+    scores, ids = BM.retrieve(idx, [5], h=3)
+    lo = scores[list(ids).index(0)]
+    hi = scores[list(ids).index(1)]
+    assert hi >= lo  # more matching occurrences never scores lower

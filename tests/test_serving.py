@@ -1,0 +1,88 @@
+"""Serving engine: micro-batching correctness, concurrency, stats."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import backends as BK
+from repro.data import qa as QA
+from repro.data.tokenizer import HashingTokenizer
+from repro.models import sm_cnn
+from repro.serving.batcher import MicroBatcher
+from repro.serving.engine import ServingEngine
+from repro.serving.stats import LatencyTracker
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_config("sm-cnn"))
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    corpus = QA.generate_corpus(n_docs=20, n_questions=5, seed=9)
+    tok = HashingTokenizer(cfg.vocab_size)
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(1, 8, 64))
+    return cfg, params, corpus, tok, scorer
+
+
+def test_microbatcher_matches_direct(world):
+    cfg, params, corpus, tok, scorer = world
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, cfg.vocab_size, (16, cfg.max_len)).astype(np.int32)
+    a = rng.integers(0, cfg.vocab_size, (16, cfg.max_len)).astype(np.int32)
+    f = rng.random((16, 4), np.float32)
+    direct = scorer(q, a, f)
+    mb = MicroBatcher(scorer, max_batch=8, max_wait_s=0.005)
+    futs = [mb.submit(q[i], a[i], f[i]) for i in range(16)]
+    out = np.asarray([x.result(timeout=10) for x in futs])
+    mb.stop()
+    np.testing.assert_allclose(out, direct, rtol=1e-5, atol=1e-6)
+    assert max(mb.batch_sizes) > 1  # coalescing actually happened
+
+
+def test_microbatcher_concurrent_clients(world):
+    cfg, params, corpus, tok, scorer = world
+    mb = MicroBatcher(scorer, max_batch=16, max_wait_s=0.01)
+    rng = np.random.default_rng(1)
+    results = {}
+
+    def client(i):
+        q = rng.integers(0, cfg.vocab_size, (cfg.max_len,)).astype(np.int32)
+        a = rng.integers(0, cfg.vocab_size, (cfg.max_len,)).astype(np.int32)
+        f = rng.random((4,), np.float32)
+        results[i] = (mb.score(q, a, f), scorer(q[None], a[None], f[None])[0])
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(12)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=20)
+    mb.stop()
+    assert len(results) == 12
+    for got, want in results.values():
+        assert abs(got - float(want)) < 1e-5
+
+
+def test_engine_end_to_end_and_stats(world):
+    cfg, params, corpus, tok, scorer = world
+    eng = ServingEngine(scorer, tok, corpus.idf, cfg.max_len,
+                        max_batch=8, max_wait_s=0.002)
+    pairs = [(corpus.questions[0], corpus.documents[0][i]) for i in range(6)]
+    out = eng.get_scores(pairs)
+    assert out.shape == (6,)
+    single = eng.get_score(*pairs[0])
+    assert abs(single - out[0]) < 1e-6
+    stats = eng.stats()
+    assert stats["count"] >= 1
+    assert stats["p99_ms"] >= stats["p50_ms"] >= 0
+    eng.stop()
+
+
+def test_latency_tracker_percentiles():
+    tr = LatencyTracker()
+    for v in [0.001] * 98 + [0.1, 0.2]:
+        tr.observe(v)
+    s = tr.summary()
+    assert s["p50_ms"] == pytest.approx(1.0)
+    assert s["p99_ms"] >= 100.0
+    assert s["count"] == 100

@@ -1,0 +1,67 @@
+"""End-to-end behaviour: train -> export -> every deployment path serves the
+SAME ranking through the multi-stage pipeline (the paper's whole claim)."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import backends as BK
+from repro.core import bm25 as BM
+from repro.core import pipeline as PL
+from repro.data import qa as QA
+from repro.data.tokenizer import HashingTokenizer
+from repro.models import sm_cnn
+from repro.training.optimizer import adamw
+from repro.training.train_loop import Trainer
+
+
+@pytest.fixture(scope="module")
+def trained_world(tmp_path_factory):
+    cfg = reduced(get_config("sm-cnn"))
+    corpus = QA.generate_corpus(n_docs=40, n_questions=20, seed=4)
+    tok = HashingTokenizer(cfg.vocab_size)
+    index = BM.build_index([tok.encode(" ".join(d)) for d in corpus.documents],
+                           cfg.vocab_size)
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    ckpt = str(tmp_path_factory.mktemp("ckpt"))
+    tr = Trainer(functools.partial(sm_cnn.loss_fn, cfg=cfg), adamw(3e-3),
+                 params, ckpt_dir=ckpt, ckpt_every=20)
+    def stream():
+        ep = 0
+        while True:
+            yield from QA.pair_batches(corpus, tok, cfg.max_len, 64, seed=ep)
+            ep += 1
+    tr.run(stream(), max_steps=40, log_every=0)
+    return cfg, corpus, tok, index, tr.params, ckpt
+
+
+def _ranking(backend, cfg, corpus, tok, index, params):
+    scorer = BK.make_scorer(backend, params, cfg, buckets=(64, 256, 1024))
+    ranker = PL.MultiStageRanker([
+        PL.RetrievalStage(index, corpus.documents, tok, h=8),
+        PL.RerankStage(scorer, tok, corpus.idf, cfg.max_len, k=5),
+    ])
+    out = []
+    for q in corpus.questions[:5]:
+        final, _ = ranker.run(q)
+        out.append([(c.doc_id, c.sent_id) for c in final])
+    return out
+
+
+def test_all_deployments_produce_identical_rankings(trained_world):
+    cfg, corpus, tok, index, params, _ = trained_world
+    base = _ranking("jit", cfg, corpus, tok, index, params)
+    for backend in ("eager", "aot", "numpy", "artifact", "pallas"):
+        assert _ranking(backend, cfg, corpus, tok, index, params) == base, backend
+
+
+def test_crash_resume_reproduces_state(trained_world):
+    cfg, corpus, tok, index, params, ckpt = trained_world
+    fresh = sm_cnn.init_sm_cnn(jax.random.PRNGKey(99), cfg)
+    tr2 = Trainer(functools.partial(sm_cnn.loss_fn, cfg=cfg), adamw(3e-3),
+                  fresh, ckpt_dir=ckpt)
+    assert tr2.restore()
+    for a, b in zip(jax.tree.leaves(tr2.params), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
