@@ -1,4 +1,6 @@
 """The paper's contribution: multi-stage ranking + serving-integration axes."""
 from repro.core.backends import BACKENDS, Scorer, make_scorer  # noqa: F401
+from repro.core.batch_pipeline import (BatchedMultiStageRanker,  # noqa: F401
+                                       verify_equivalence)
 from repro.core.pipeline import (Candidate, CutoffStage, MultiStageRanker,  # noqa: F401
                                  RerankStage, RetrievalStage, Stage)

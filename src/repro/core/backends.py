@@ -45,6 +45,11 @@ class Scorer:
 
     def __call__(self, q_tok, a_tok, feats) -> np.ndarray:
         n = q_tok.shape[0]
+        cap = self._buckets[-1]
+        if n > cap:  # coalesced cross-query batches: chunk to the top bucket
+            return np.concatenate(
+                [self(q_tok[i:i + cap], a_tok[i:i + cap], feats[i:i + cap])
+                 for i in range(0, n, cap)])
         b = _bucket(n, self._buckets)
         if b != n:  # pad to bucket so jit/aot hit their compiled entry
             pad = b - n

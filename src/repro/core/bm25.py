@@ -109,3 +109,51 @@ def retrieve(index: BM25Index, query_terms: Sequence[int], h: int,
                                   jnp.asarray(index.doc_len),
                                   index.avg_dl, h)
     return np.asarray(scores), np.asarray(ids)
+
+
+@functools.partial(jax.jit, static_argnames=("h",))
+def _score_postings_many(post_docs, post_tf, post_idf, doc_len, avg_dl, h):
+    """(Q, P) postings -> per-query top-h. One segment_sum over a flattened
+    (query, doc) segment id space instead of Q separate dispatches."""
+    q, p = post_docs.shape
+    n_docs = doc_len.shape[0]
+    norm = K1 * (1.0 - B + B * doc_len[post_docs] / avg_dl)
+    contrib = post_idf * post_tf * (K1 + 1.0) / (post_tf + norm)
+    seg = (post_docs + jnp.arange(q, dtype=post_docs.dtype)[:, None] * n_docs)
+    scores = jax.ops.segment_sum(contrib.reshape(-1), seg.reshape(-1),
+                                 num_segments=q * n_docs).reshape(q, n_docs)
+    return jax.lax.top_k(scores, h)
+
+
+def _pad_bucket(n: int, lo: int = 256) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def retrieve_many(index: BM25Index, queries_terms: Sequence[Sequence[int]],
+                  h: int, budget: int = 16384
+                  ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Batched ``retrieve``: same per-query (scores, doc_ids), one padded
+    (Q, P) scoring call. Both dims are bucketed to powers of two so jit
+    entries are shared across batch sizes (all-zero padding rows/columns
+    contribute nothing and padded-query results are discarded)."""
+    if not queries_terms:
+        return []
+    gathered = [gather_query_postings(index, t, budget) for t in queries_terms]
+    # gather pads each to `budget`; trim to the batch max, then re-bucket
+    # (real postings always have tf > 0, padding is all-zero)
+    nnz = [int(np.count_nonzero(g[1])) for g in gathered]
+    p = min(budget, _pad_bucket(max(max(nnz), 1)))
+    qb = _pad_bucket(len(gathered), lo=8)
+    pad_rows = [(np.zeros((p,), np.int32), np.zeros((p,), np.float32),
+                 np.zeros((p,), np.float32))] * (qb - len(gathered))
+    docs = np.stack([g[0][:p] for g in gathered + pad_rows])
+    tfs = np.stack([g[1][:p] for g in gathered + pad_rows])
+    idfs = np.stack([g[2][:p] for g in gathered + pad_rows])
+    scores, ids = _score_postings_many(docs, tfs, idfs,
+                                       jnp.asarray(index.doc_len),
+                                       index.avg_dl, h)
+    scores, ids = np.asarray(scores), np.asarray(ids)
+    return [(scores[i], ids[i]) for i in range(len(gathered))]

@@ -54,9 +54,7 @@ class RetrievalStage(Stage):
         self.tok = tokenizer
         self.h = h
 
-    def run(self, query, candidates=None) -> List[Candidate]:
-        terms = self.tok.encode(query)
-        scores, doc_ids = bm25_lib.retrieve(self.index, terms, self.h)
+    def _segment(self, scores, doc_ids) -> List[Candidate]:
         out = []
         for s, di in zip(scores, doc_ids):
             if s <= 0:
@@ -64,6 +62,20 @@ class RetrievalStage(Stage):
             for si, sent in enumerate(self.documents[int(di)]):
                 out.append(Candidate(int(di), si, sent, float(s)))
         return out
+
+    def run(self, query, candidates=None) -> List[Candidate]:
+        terms = self.tok.encode(query)
+        scores, doc_ids = bm25_lib.retrieve(self.index, terms, self.h)
+        return self._segment(scores, doc_ids)
+
+    def run_batch(self, queries: Sequence[str],
+                  states=None) -> List[List[Candidate]]:
+        """Per-query retrieval, but one coalesced (Q, P) BM25 scoring call
+        (identical per-query results to ``run``)."""
+        hits = bm25_lib.retrieve_many(self.index,
+                                      [self.tok.encode(q) for q in queries],
+                                      self.h)
+        return [self._segment(scores, doc_ids) for scores, doc_ids in hits]
 
 
 class RerankStage(Stage):

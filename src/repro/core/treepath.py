@@ -1,0 +1,21 @@
+"""Pytree key-path rendering, stable across JAX versions.
+
+``jax.tree_util.keystr`` only grew its ``simple=``/``separator=`` kwargs
+after 0.4.37, but exported tensor names ("layers/0/w") and sharding-rule
+regexes depend on the simple '/'-joined form — so render key entries here
+instead of depending on the installed signature.
+"""
+from __future__ import annotations
+
+
+def keystr(path) -> str:
+    """Render a tree_flatten_with_path key path as "a/0/w"."""
+    parts = []
+    for entry in path:
+        for attr in ("key", "idx", "name"):  # DictKey / SequenceKey / GetAttrKey
+            if hasattr(entry, attr):
+                parts.append(str(getattr(entry, attr)))
+                break
+        else:
+            parts.append(str(entry).strip("[].'\""))
+    return "/".join(parts)

@@ -3,28 +3,50 @@
 The paper's TSimpleServer scores one request at a time; a production
 deployment amortizes dispatch by coalescing concurrent requests into
 bucketed batches (Table 1 shows 8-30x per-pair speedup at batch 64). This
-batcher implements the standard policy: collect up to ``max_batch`` requests
+batcher implements the standard policy: collect up to ``max_batch`` rows
 or wait at most ``max_wait_s``, pad to the scorer's bucket, scatter results
 back to per-request futures.
+
+Two submission granularities share one queue and one worker:
+
+  submit       — a single (q_tok, a_tok, feats) row    -> Future[float]
+  submit_many  — a whole (n, ...) sub-batch, e.g. every rerank pair of one
+                 pipeline query batch                  -> Future[np.ndarray]
+
+Sub-batches stay contiguous in the coalesced scorer call and resolve with
+one future, so a batched pipeline pays one enqueue + one wakeup per query
+batch instead of one per candidate pair.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import Future
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional
 
 import numpy as np
 
 
 class _Item:
-    __slots__ = ("q_tok", "a_tok", "feats", "future")
+    """One queue entry: ``n`` rows scored together, one future.
 
-    def __init__(self, q_tok, a_tok, feats):
+    ``single`` marks a scalar ``submit`` (future resolves to float);
+    otherwise the future resolves to the (n,) score array."""
+
+    __slots__ = ("q_tok", "a_tok", "feats", "n", "single", "future")
+
+    def __init__(self, q_tok, a_tok, feats, single: bool):
+        q_tok, a_tok = np.asarray(q_tok), np.asarray(a_tok)
+        feats = np.asarray(feats)
+        if single:
+            q_tok, a_tok, feats = q_tok[None], a_tok[None], feats[None]
         self.q_tok = q_tok
         self.a_tok = a_tok
         self.feats = feats
-        self.future: "Future[float]" = Future()
+        self.n = q_tok.shape[0]
+        self.single = single
+        self.future: Future = Future()
 
 
 class MicroBatcher:
@@ -42,7 +64,18 @@ class MicroBatcher:
 
     def submit(self, q_tok: np.ndarray, a_tok: np.ndarray,
                feats: np.ndarray) -> "Future[float]":
-        item = _Item(q_tok, a_tok, feats)
+        item = _Item(q_tok, a_tok, feats, single=True)
+        self._q.put(item)
+        return item.future
+
+    def submit_many(self, q_tok: np.ndarray, a_tok: np.ndarray,
+                    feats: np.ndarray) -> "Future[np.ndarray]":
+        """Enqueue an (n, ...) sub-batch; the future resolves to all n scores
+        at once (empty sub-batches resolve immediately)."""
+        item = _Item(q_tok, a_tok, feats, single=False)
+        if item.n == 0:
+            item.future.set_result(np.zeros((0,), np.float32))
+            return item.future
         self._q.put(item)
         return item.future
 
@@ -56,11 +89,10 @@ class MicroBatcher:
             return []
         if first is None:
             return []
-        items = [first]
+        items, rows = [first], first.n
         deadline = self.max_wait_s
-        import time
         t0 = time.perf_counter()
-        while len(items) < self.max_batch:
+        while rows < self.max_batch:
             remaining = deadline - (time.perf_counter() - t0)
             if remaining <= 0:
                 break
@@ -71,6 +103,7 @@ class MicroBatcher:
             if nxt is None:
                 break
             items.append(nxt)
+            rows += nxt.n
         return items
 
     def _loop(self):
@@ -79,13 +112,17 @@ class MicroBatcher:
             if not items:
                 continue
             try:
-                q = np.stack([i.q_tok for i in items])
-                a = np.stack([i.a_tok for i in items])
-                f = np.stack([i.feats for i in items])
-                scores = self.scorer(q, a, f)
-                self.batch_sizes.append(len(items))
-                for i, s in zip(items, scores):
-                    i.future.set_result(float(s))
+                q = np.concatenate([i.q_tok for i in items])
+                a = np.concatenate([i.a_tok for i in items])
+                f = np.concatenate([i.feats for i in items])
+                scores = np.asarray(self.scorer(q, a, f))
+                self.batch_sizes.append(int(q.shape[0]))
+                offset = 0
+                for i in items:
+                    seg = scores[offset:offset + i.n]
+                    offset += i.n
+                    i.future.set_result(float(seg[0]) if i.single
+                                        else np.asarray(seg))
             except Exception as e:  # noqa: BLE001 — propagate to callers
                 for i in items:
                     if not i.future.done():

@@ -35,6 +35,7 @@ def _one_train_step(loss_fn, params, batch):
 
 @pytest.mark.parametrize("arch", LM_ARCHS)
 @pytest.mark.parametrize("attn_impl", ["flash", "chunked"])
+@pytest.mark.slow
 def test_lm_smoke(arch, attn_impl):
     import dataclasses
     cfg = dataclasses.replace(reduced(get_config(arch)), attn_impl=attn_impl)
@@ -48,6 +49,7 @@ def test_lm_smoke(arch, attn_impl):
 
 
 @pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.slow
 def test_lm_prefill_decode_consistency(arch):
     """decode_step at position t must reproduce forward logits at t.
 
@@ -76,6 +78,7 @@ def test_lm_prefill_decode_consistency(arch):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_agreement():
     """int8 KV decode must agree with the full-sequence forward (top-1
     identical, logits within quantization tolerance)."""
@@ -97,6 +100,7 @@ def test_int8_kv_cache_decode_agreement():
     assert cache["k"].dtype == jnp.int8
 
 
+@pytest.mark.slow
 def test_gnn_smoke():
     cfg = reduced(get_config("meshgraphnet"))
     batch = graph_data.graph_batch(50, 120, d_feat=8, d_out=cfg.d_out, seed=1)
@@ -110,6 +114,7 @@ def test_gnn_smoke():
     _one_train_step(functools.partial(gnn_lib.loss_fn, cfg=cfg), params, batch)
 
 
+@pytest.mark.slow
 def test_gnn_batched_smoke():
     cfg = reduced(get_config("meshgraphnet"))
     batch = graph_data.graph_batch(12, 30, d_feat=6, d_out=cfg.d_out,
@@ -125,6 +130,7 @@ def test_gnn_batched_smoke():
 
 
 @pytest.mark.parametrize("arch", REC_ARCHS)
+@pytest.mark.slow
 def test_recsys_smoke(arch):
     cfg = reduced(get_config(arch))
     params = rec_lib.init_model(KEY, cfg)

@@ -1,0 +1,244 @@
+"""Batched cross-query pipeline engine: equivalence with the sequential
+ranker on every backend, Scorer chunking past the top bucket, sub-batch
+micro-batching (submit_many), and featurization-cache behaviour."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import backends as BK
+from repro.core import bm25 as BM
+from repro.core import pipeline as PL
+from repro.core.batch_pipeline import BatchedMultiStageRanker, verify_equivalence
+from repro.data import qa as QA
+from repro.data.featurize import FeaturizationCache, LRUCache
+from repro.data.tokenizer import HashingTokenizer, overlap_features
+from repro.models import sm_cnn
+from repro.serving.batcher import MicroBatcher
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_config("sm-cnn"))
+    corpus = QA.generate_corpus(n_docs=40, n_questions=24, seed=3)
+    tok = HashingTokenizer(cfg.vocab_size)
+    index = BM.build_index([tok.encode(" ".join(d)) for d in corpus.documents],
+                           cfg.vocab_size)
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    return cfg, params, corpus, tok, index
+
+
+def _stages(scorer, world, cutoff=True):
+    cfg, params, corpus, tok, index = world
+    stages = [PL.RetrievalStage(index, corpus.documents, tok, h=8)]
+    if cutoff:
+        stages.append(PL.CutoffStage(margin=2.0))
+    stages.append(PL.RerankStage(scorer, tok, corpus.idf, cfg.max_len, k=5))
+    return stages
+
+
+@pytest.mark.parametrize("backend", ["eager", "jit", "aot", "numpy", "pallas"])
+def test_batched_matches_sequential(world, backend):
+    """The batched engine must produce byte-identical rankings to the
+    sequential cascade on every integration backend."""
+    cfg, params, corpus, tok, index = world
+    scorer = BK.make_scorer(backend, params, cfg, buckets=(8, 64))
+    stages = _stages(scorer, world)
+    seq = PL.MultiStageRanker(stages)
+    bat = BatchedMultiStageRanker(stages)
+    queries = corpus.questions[:12]
+    verify_equivalence(seq, bat, queries)
+    # scores agree too (same rows through the same backend)
+    for (sc, _), (bc, _) in zip([seq.run(q) for q in queries],
+                                bat.run_batch(queries)):
+        np.testing.assert_allclose([c.score for c in bc],
+                                   [c.score for c in sc], rtol=1e-5, atol=1e-6)
+
+
+def test_batched_traces_cover_all_stages(world):
+    cfg, params, corpus, tok, index = world
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(8, 64))
+    stages = _stages(scorer, world)
+    results = BatchedMultiStageRanker(stages).run_batch(corpus.questions[:4])
+    for cands, trace in results:
+        assert [t.name for t in trace] == [s.name for s in stages]
+        assert all(t.latency_s >= 0 for t in trace)
+
+
+def test_batched_handles_empty_and_single(world):
+    cfg, params, corpus, tok, index = world
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(8, 64))
+    stages = _stages(scorer, world, cutoff=False)
+    bat = BatchedMultiStageRanker(stages)
+    assert bat.run_batch([]) == []
+    # single-query run + an out-of-corpus query match the sequential ranker
+    verify_equivalence(PL.MultiStageRanker(stages), bat,
+                       [corpus.questions[0], "zzzz qqqq xxxx"])
+    # a rerank stage with no upstream candidates yields an empty StageResult
+    rerank_only = BatchedMultiStageRanker([stages[-1]])
+    cands, trace = rerank_only.run(corpus.questions[0])
+    assert cands == []
+    assert len(trace) == 1 and trace[0].candidates == []
+
+
+def test_retrieve_many_matches_retrieve(world):
+    cfg, params, corpus, tok, index = world
+    terms = [tok.encode(q) for q in corpus.questions[:8]]
+    batched = BM.retrieve_many(index, terms, h=6)
+    for t, (bs, bi) in zip(terms, batched):
+        ss, si = BM.retrieve(index, t, h=6)
+        np.testing.assert_allclose(bs, ss, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(bi, si)
+    assert BM.retrieve_many(index, [], h=6) == []
+
+
+def test_scorer_chunks_past_top_bucket(world):
+    """Coalesced cross-query batches can exceed the largest bucket; the
+    Scorer must chunk instead of negative-padding."""
+    cfg, params, corpus, tok, index = world
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(8, 16))
+    rng = np.random.default_rng(0)
+    n = 41  # > 2x top bucket, non-divisible remainder
+    q = rng.integers(0, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    a = rng.integers(0, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+    f = rng.random((n, 4), np.float32)
+    out = scorer(q, a, f)
+    assert out.shape == (n,)
+    ref = np.concatenate([scorer(q[i:i + 8], a[i:i + 8], f[i:i + 8])
+                          for i in range(0, n, 8)])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+# --- MicroBatcher.submit_many ------------------------------------------------
+
+def test_submit_many_matches_direct(world):
+    cfg, params, corpus, tok, index = world
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(8, 64))
+    rng = np.random.default_rng(1)
+    q = rng.integers(0, cfg.vocab_size, (10, cfg.max_len)).astype(np.int32)
+    a = rng.integers(0, cfg.vocab_size, (10, cfg.max_len)).astype(np.int32)
+    f = rng.random((10, 4), np.float32)
+    direct = scorer(q, a, f)
+    mb = MicroBatcher(scorer, max_batch=32, max_wait_s=0.005)
+    out = mb.submit_many(q, a, f).result(timeout=10)
+    empty = mb.submit_many(q[:0], a[:0], f[:0]).result(timeout=10)
+    mb.stop()
+    np.testing.assert_allclose(out, direct, rtol=1e-5, atol=1e-6)
+    assert empty.shape == (0,)
+
+
+def test_submit_many_concurrent_no_lost_futures(world):
+    """Many threads race sub-batches and singles through one batcher: every
+    future resolves with the right scores and rows never cross sub-batches."""
+    cfg, params, corpus, tok, index = world
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(8, 64))
+    mb = MicroBatcher(scorer, max_batch=16, max_wait_s=0.005)
+    rng = np.random.default_rng(2)
+    results, errors = {}, []
+
+    def client(i):
+        try:
+            n = 1 + (i % 5)
+            q = rng.integers(0, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+            a = rng.integers(0, cfg.vocab_size, (n, cfg.max_len)).astype(np.int32)
+            f = rng.random((n, 4), np.float32)
+            got = mb.submit_many(q, a, f).result(timeout=20)
+            results[i] = (got, scorer(q, a, f))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    mb.stop()
+    assert not errors
+    assert len(results) == 16
+    for got, want in results.values():
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert max(mb.batch_sizes) > 5  # sub-batches actually coalesced
+
+
+def test_submit_many_exception_propagates_to_all():
+    def broken(q, a, f):
+        raise RuntimeError("scorer exploded")
+
+    mb = MicroBatcher(broken, max_batch=8, max_wait_s=0.01)
+    row = np.zeros((3,), np.int32)
+    futs = [mb.submit_many(np.zeros((2, 3), np.int32),
+                           np.zeros((2, 3), np.int32),
+                           np.zeros((2, 4), np.float32)),
+            mb.submit(row, row, np.zeros((4,), np.float32))]
+    for fut in futs:
+        with pytest.raises(RuntimeError, match="scorer exploded"):
+            fut.result(timeout=10)
+    mb.stop()
+
+
+# --- featurization cache -----------------------------------------------------
+
+def test_lru_cache_evicts_and_counts():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1      # refreshes 'a'
+    c.put("c", 3)               # evicts 'b' (least recent)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert len(c) == 2
+    assert c.hits == 3 and c.misses == 1
+
+
+def test_featurization_cache_matches_uncached(world):
+    cfg, params, corpus, tok, index = world
+    cache = FeaturizationCache(tok, corpus.idf, cfg.max_len, capacity=64)
+    q = corpus.questions[0]
+    for a in corpus.documents[0][:4]:
+        q_row, a_row, feats = cache.featurize(q, a)
+        np.testing.assert_array_equal(
+            q_row, np.asarray(tok.encode(q, cfg.max_len), np.int32))
+        np.testing.assert_array_equal(
+            a_row, np.asarray(tok.encode(a, cfg.max_len), np.int32))
+        np.testing.assert_allclose(
+            feats, overlap_features(tok.words(q), tok.words(a), corpus.idf),
+            rtol=0, atol=0)
+    before = cache.stats()["feat_cache_hits"]
+    cache.featurize(q, corpus.documents[0][0])  # fully repeated pair
+    assert cache.stats()["feat_cache_hits"] > before
+
+
+def test_pair_feats_many_matches_scalar_formula(world):
+    """The vectorized matrix path must reproduce tokenizer.overlap_features
+    (the canonical formula) to float32 rounding, cold and cached."""
+    cfg, params, corpus, tok, index = world
+    cache = FeaturizationCache(tok, corpus.idf, cfg.max_len, capacity=4096)
+    pairs = [(q, s) for q in corpus.questions[:5]
+             for d in corpus.documents[:8] for s in d]
+    ref = np.stack([overlap_features(tok.words(q), tok.words(a), corpus.idf)
+                    for q, a in pairs])
+    np.testing.assert_allclose(cache.pair_feats_many(pairs), ref,
+                               rtol=0, atol=1e-6)   # cold: matmul path
+    np.testing.assert_allclose(cache.pair_feats_many(pairs), ref,
+                               rtol=0, atol=1e-6)   # warm: LRU path
+
+
+def test_engine_uses_cache_and_submit_many(world):
+    from repro.serving.engine import ServingEngine
+    cfg, params, corpus, tok, index = world
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(8, 64))
+    eng = ServingEngine(scorer, tok, corpus.idf, cfg.max_len,
+                        max_batch=8, max_wait_s=0.002)
+    pairs = [(corpus.questions[0], corpus.documents[0][i % 3])
+             for i in range(9)]
+    out1 = eng.get_scores(pairs)
+    out2 = eng.get_scores(pairs)
+    eng.stop()
+    np.testing.assert_allclose(out1, out2, rtol=0, atol=0)
+    s = eng.stats()
+    assert s["feat_cache_hit_rate"] > 0.5  # repeats hit the LRU
+    assert s["mean_batch"] > 1  # rows went through as sub-batches
