@@ -1,0 +1,239 @@
+"""Open-loop Poisson load generator for the RPC serving cluster.
+
+Closed-loop benchmarks (issue, wait, repeat — Table 2's client) hide
+queueing collapse: the client slows down with the server, so offered load
+sags exactly when the system saturates. This generator is open-loop: a
+Poisson arrival schedule is fixed up front at an offered QPS and every
+request is launched at its scheduled time whether or not earlier ones have
+completed, so latency includes the queueing delay a real user would see
+(coordinated-omission-free: lateness counts from the SCHEDULED arrival).
+
+``sweep`` walks offered QPS levels and reports achieved throughput with
+p50/p99 — the throughput-vs-tail-latency curve for SimpleServer vs
+ThreadPoolServer x replicas that extends the paper's Table 2. Shed replies
+(MSG_SHED from admission control) are counted separately from errors:
+under overload a well-behaved cluster sheds fast instead of queueing
+unboundedly.
+
+  PYTHONPATH=src python -m benchmarks.loadgen            # standalone sweep
+  PYTHONPATH=src python -m benchmarks.run --table loadgen --json out.json
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import service as SV
+from repro.core import wire
+
+
+def poisson_arrivals(offered_qps: float, duration_s: float,
+                     seed: int = 0) -> List[float]:
+    """Exponential inter-arrival times at rate ``offered_qps``."""
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    while True:
+        t += rng.expovariate(offered_qps)
+        if t >= duration_s:
+            return out
+        out.append(t)
+
+
+def run_level(address: Tuple[str, int], reqs: Sequence[Tuple[str, str]],
+              offered_qps: float, duration_s: float, n_conns: int = 4,
+              deadline_s: Optional[float] = None, seed: int = 0
+              ) -> Dict[str, float]:
+    """Drive one offered-QPS level with ``n_conns`` persistent connections.
+
+    Arrivals are struck round-robin across connections; a connection that
+    falls behind its schedule fires immediately and the lateness shows up
+    in the measured latency (open-loop semantics).
+    """
+    arrivals = poisson_arrivals(offered_qps, duration_s, seed)
+    lock = threading.Lock()
+    lats: List[float] = []
+    counts = {"ok": 0, "shed": 0, "error": 0}
+    clients: List[SV.Client] = []
+    stop = threading.Event()
+    t0_box = [0.0]
+    last_done = [0.0]
+
+    def worker(wid: int):
+        try:
+            cl = SV.Client(address)
+        except OSError:
+            with lock:
+                counts["error"] += len(arrivals[wid::n_conns])
+            return
+        with lock:
+            clients.append(cl)
+        for i, at in list(enumerate(arrivals))[wid::n_conns]:
+            if stop.is_set():
+                break
+            wait = at - (time.perf_counter() - t0_box[0])
+            if wait > 0:
+                time.sleep(wait)
+            q, a = reqs[i % len(reqs)]
+            try:
+                # The deadline is a budget from the SCHEDULED arrival: a
+                # request fired late (connection behind schedule) has
+                # already burned part of it, so the server can shed it as
+                # expired — the wire deadline is relative to send time.
+                budget = deadline_s
+                if budget is not None:
+                    budget -= (time.perf_counter() - t0_box[0]) - at
+                cl.get_score(q, a, deadline_s=budget)
+                done = time.perf_counter() - t0_box[0]
+                with lock:
+                    lats.append(done - at)
+                    counts["ok"] += 1
+                    last_done[0] = max(last_done[0], done)
+            except wire.ShedError:
+                with lock:
+                    counts["shed"] += 1
+            except (ConnectionError, OSError, RuntimeError, ValueError):
+                if stop.is_set():
+                    break
+                with lock:
+                    counts["error"] += 1
+
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+               for w in range(n_conns)]
+    t0_box[0] = time.perf_counter()
+    for t in threads:
+        t.start()
+    # Grace beyond the schedule for in-flight requests, then force-stop:
+    # workers stuck behind a saturated server (e.g. SimpleServer never
+    # accepting their connection) are unblocked by closing their sockets.
+    deadline_join = duration_s + max(2.0, duration_s)
+    for t in threads:
+        t.join(timeout=max(deadline_join - (time.perf_counter() - t0_box[0]),
+                           0.05))
+    stop.set()
+    with lock:
+        snapshot = list(clients)
+    for cl in snapshot:
+        cl.reconnect = False
+        try:
+            cl.close()
+        except OSError:
+            pass
+    for t in threads:
+        t.join(timeout=1.0)
+    with lock:
+        # Sustained-throughput window: the schedule length, extended to the
+        # last completion (stuck connections don't inflate it forever).
+        elapsed = max(duration_s, last_done[0])
+        xs = sorted(lats)
+        done = dict(counts)
+    from repro.serving.stats import LatencyTracker
+    pct = LatencyTracker._interp_percentile
+    n_sched = len(arrivals)
+    return {
+        "offered_qps": offered_qps,
+        "achieved_qps": done["ok"] / max(elapsed, 1e-9),
+        "p50_ms": pct(xs, 0.50) * 1e3,
+        "p99_ms": pct(xs, 0.99) * 1e3,
+        "n_scheduled": float(n_sched),
+        "n_ok": float(done["ok"]),
+        "n_shed": float(done["shed"]),
+        "n_error": float(done["error"]),
+        "shed_rate": done["shed"] / max(n_sched, 1),
+        "duration_s": elapsed,
+        "n_conns": float(n_conns),
+    }
+
+
+def sweep(address, reqs, qps_levels: Sequence[float], duration_s: float,
+          n_conns: int = 4, deadline_s: Optional[float] = None,
+          seed: int = 0) -> List[Dict[str, float]]:
+    return [run_level(address, reqs, qps, duration_s, n_conns,
+                      deadline_s, seed + i)
+            for i, qps in enumerate(qps_levels)]
+
+
+def _make_requests(corpus, pairs, n: int):
+    reqs = []
+    for qi, di, si, _ in (pairs * 50)[:n]:
+        reqs.append((corpus.questions[qi], corpus.documents[di][si]))
+    return reqs
+
+
+def run(world=None, qps_levels: Sequence[float] = (100.0, 300.0),
+        duration_s: float = 1.5, n_conns: int = 4, replicas: int = 2,
+        backend: str = "jit") -> List[Dict]:
+    """Benchmark entry (benchmarks.run): SimpleServer vs ThreadPoolServer x
+    replicas on the same backend, same offered-QPS sweep, plus one overload
+    level demonstrating deadline/queue shedding."""
+    from benchmarks.common import build_world
+    from repro.serving.admission import AdmissionController
+    from repro.serving.cluster import ReplicaPool
+    from repro.core import backends as BK
+
+    cfg, params, corpus, tok, index, pairs = world or build_world()
+    reqs = _make_requests(corpus, pairs, 512)
+    rows: List[Dict] = []
+
+    def to_row(tag: str, r: Dict[str, float]) -> Dict:
+        qps = max(r["achieved_qps"], 1e-9)
+        return {"name": f"loadgen/{tag}-offered{int(r['offered_qps'])}",
+                "us_per_call": 1e6 / qps,
+                "derived": (f"qps={r['achieved_qps']:.1f} "
+                            f"p50_ms={r['p50_ms']:.2f} "
+                            f"p99_ms={r['p99_ms']:.2f} "
+                            f"shed={int(r['n_shed'])} "
+                            f"err={int(r['n_error'])}"),
+                "loadgen": r}
+
+    # -- paper-faithful single-threaded server ------------------------------
+    scorer = BK.make_scorer(backend, params, cfg, buckets=(1, 8, 64))
+    handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
+                                          cfg.max_len)
+    srv = SV.SimpleServer(handler).start_background()
+    with SV.Client(srv.address) as cl:
+        cl.get_score(*reqs[0])  # warm the compiled entry
+    for r in sweep(srv.address, reqs, qps_levels, duration_s, n_conns):
+        rows.append(to_row("simple", r))
+    srv.stop()
+
+    # -- threadpool server over a replica pool ------------------------------
+    pool = ReplicaPool.build(backend, params, cfg, tok, corpus.idf,
+                             n_replicas=replicas, buckets=(1, 8, 64),
+                             policy="least_outstanding")
+    # Warm every replica at every coalescing bucket so runtime jit
+    # compilation doesn't masquerade as tail latency in the sweep.
+    for bucket in (1, 8, 64):
+        q_tok, a_tok, feats = pool._featurize_batch(reqs[:bucket])
+        for rep in pool.replicas:
+            rep.batcher.submit_many(q_tok, a_tok, feats).result()
+    admission = AdmissionController(max_queue_rows=256)
+    srv = SV.ThreadPoolServer(pool, num_workers=max(n_conns * 2, 8),
+                              admission=admission).start_background()
+    with SV.Client(srv.address) as cl:
+        cl.get_score(*reqs[0])
+    tag = f"threadpool-x{replicas}"
+    for r in sweep(srv.address, reqs, qps_levels, duration_s, n_conns):
+        rows.append(to_row(tag, r))
+    srv.stop()
+
+    # Overload: many connections offering far past capacity against a tight
+    # queue bound and deadline — the cluster must shed (SHED replies)
+    # rather than queue unboundedly.
+    over_conns = max(n_conns * 4, 16)
+    srv = SV.ThreadPoolServer(pool, num_workers=over_conns,
+                              admission=AdmissionController(max_queue_rows=8)
+                              ).start_background()
+    over = run_level(srv.address, reqs, offered_qps=qps_levels[-1] * 10,
+                     duration_s=min(duration_s, 1.0), n_conns=over_conns,
+                     deadline_s=0.05)
+    rows.append(to_row(f"{tag}-overload", over))
+    srv.stop()
+    pool.stop()
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

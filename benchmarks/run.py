@@ -1,29 +1,34 @@
 """Benchmark orchestrator. One function per paper table; prints
-``name,us_per_call,derived`` CSV.
+``name,us_per_call,derived`` CSV and can dump the full rows as JSON so the
+perf trajectory is machine-readable across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run            # all tables, quick
-  PYTHONPATH=src python -m benchmarks.run --table 1  # just Table 1
+  PYTHONPATH=src python -m benchmarks.run                # all tables, quick
+  PYTHONPATH=src python -m benchmarks.run --table 1      # just Table 1
+  PYTHONPATH=src python -m benchmarks.run --table loadgen --json out.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table", default="all",
-                    choices=["all", "1", "2", "e2e", "roofline"])
+                    choices=["all", "1", "2", "e2e", "loadgen", "roofline"])
     ap.add_argument("--naive", action="store_true",
                     help="include the naive per-filter conv condition")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result rows as a JSON list")
     args = ap.parse_args()
 
-    from benchmarks import (e2e_pipeline, roofline_table, table1_feedforward,
-                            table2_service)
+    from benchmarks import (e2e_pipeline, loadgen, roofline_table,
+                            table1_feedforward, table2_service)
     from benchmarks.common import build_world
 
     rows = []
     world = None
-    if args.table in ("all", "1", "2", "e2e"):
+    if args.table in ("all", "1", "2", "e2e", "loadgen"):
         world = build_world()
     if args.table in ("all", "1"):
         rows += table1_feedforward.run(batch=1, world=world, naive=args.naive)
@@ -33,12 +38,18 @@ def main() -> None:
         rows += table2_service.run(world=world)
     if args.table in ("all", "e2e"):
         rows += e2e_pipeline.run(world=world)
+    if args.table in ("all", "loadgen"):
+        rows += loadgen.run(world=world)
     if args.table in ("all", "roofline"):
         rows += roofline_table.run()
 
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,23 @@ questions through the full multi-stage pipeline.
 
   PYTHONPATH=src python examples/serve_pipeline.py [--requests 200]
 
+Server modes (also available via ``python -m repro.launch.serve``):
+
+  --server simple      the paper's TSimpleServer: one thread, one connection
+      at a time — a second client literally queues behind the first.
+  --server threadpool  the TThreadPoolServer analogue: a worker pool
+      multiplexes many connections onto a ``ReplicaPool`` of ``--replicas``
+      independent scorer replicas (each with its own micro-batcher), routed
+      by ``--policy`` (round_robin | least_outstanding | p2c) behind
+      deadline-aware admission control (``--max-queue`` bounds outstanding
+      rows; over-budget or expired requests get SHED replies instead of
+      queueing — see repro.serving.admission).
+
+Clients may attach a per-request deadline (``Client.get_score(q, a,
+deadline_s=...)``, wire protocol v2); v1 clients without deadlines keep
+working. For throughput-vs-tail-latency curves under open-loop Poisson
+load, use ``python -m benchmarks.run --table loadgen --json out.json``.
+
 The pipeline section runs the same stage cascade two ways:
 
   sequential — ``MultiStageRanker.run(query)`` per query: every query pays
@@ -33,15 +50,34 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--backend", default="aot", choices=BK.BACKENDS)
+    ap.add_argument("--server", default="simple",
+                    choices=["simple", "threadpool"])
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--policy", default="least_outstanding")
+    ap.add_argument("--max-queue", type=int, default=512)
     args = ap.parse_args()
 
     print("== building world (corpus, index, trained reranker) ==")
     cfg, params, corpus, tok, index, pairs = build_world(train_steps=80)
 
-    print(f"== serving through RPC ({args.backend} backend) ==")
+    print(f"== serving through RPC ({args.backend} backend, "
+          f"{args.server} server) ==")
     scorer = BK.make_scorer(args.backend, params, cfg, buckets=(1, 8, 64, 256))
-    handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf, cfg.max_len)
-    srv = SV.SimpleServer(handler).start_background()
+    pool = None
+    if args.server == "simple":
+        handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
+                                              cfg.max_len)
+        srv = SV.SimpleServer(handler).start_background()
+    else:
+        from repro.serving.admission import AdmissionController
+        from repro.serving.cluster import ReplicaPool
+        pool = ReplicaPool.build(args.backend, params, cfg, tok, corpus.idf,
+                                 n_replicas=args.replicas,
+                                 buckets=(1, 8, 64, 256), policy=args.policy)
+        admission = (AdmissionController(args.max_queue)
+                     if args.max_queue > 0 else None)
+        srv = SV.ThreadPoolServer(pool,
+                                  admission=admission).start_background()
     client = SV.Client(srv.address)
 
     reqs = []
@@ -67,6 +103,11 @@ def main():
     print(f"  batched(64)          QPS={64/bdt:8.1f}")
     client.close()
     srv.stop()
+    if pool is not None:
+        print("  cluster stats: " + " ".join(
+            f"{k}={v:.1f}" for k, v in sorted(pool.stats().items())
+            if k.endswith("_requests") or k == "outstanding_rows"))
+        pool.stop()
 
     print("\n== multi-stage pipeline answers ==")
     stages_list = [

@@ -1,15 +1,26 @@
-"""Socket RPC service — the paper's Thrift TSimpleServer analogue.
+"""Socket RPC service — the paper's Thrift server analogues.
 
-Single-threaded accept loop, one connection at a time, repeated requests per
-connection: exactly TSimpleServer semantics, so the measured overhead
-(serialization + transport + dispatch) is comparable to the paper's Table 2.
+``SimpleServer`` is TSimpleServer: single-threaded accept loop, one
+connection at a time, repeated requests per connection — exactly the
+paper's Table 2 setup, so the measured overhead (serialization + transport
++ dispatch) stays comparable.
+
+``ThreadPoolServer`` is the TThreadPoolServer analogue the paper leaves on
+the table: a fixed pool of worker threads each serving one accepted
+connection at a time, multiplexing many concurrent clients onto a shared
+handler (a ``QuestionAnsweringHandler`` or a ``serving.cluster.ReplicaPool``).
+It understands the v2 wire deadline field and can shed requests through a
+``serving.admission.AdmissionController`` instead of queueing unboundedly.
+
 The handler wraps ANY integration backend (Scorer) plus the tokenizer and
 overlap featurizer — mirroring QuestionAnsweringHandler in Figure 3.
 """
 from __future__ import annotations
 
+import queue
 import socket
 import threading
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -17,6 +28,12 @@ import numpy as np
 from repro.core import wire
 from repro.core.backends import Scorer
 from repro.data.tokenizer import HashingTokenizer, overlap_features
+from repro.serving.admission import SHED_TOO_LARGE
+
+#: Per-connection socket timeout: bounds how long a silent client can hold
+#: a serving thread past ``stop()`` (the read loop re-checks the stop flag
+#: at this cadence).
+CONN_TIMEOUT_S = 0.5
 
 
 class QuestionAnsweringHandler:
@@ -38,16 +55,94 @@ class QuestionAnsweringHandler:
         return self.scorer(q_tok, a_tok, feats)
 
 
+def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
+                      admission=None) -> None:
+    """Request loop for one accepted connection, shared by both servers.
+
+    ``handler`` needs only ``get_scores(pairs) -> array``; with an
+    ``AdmissionController`` attached, requests are admitted (or shed with a
+    MSG_SHED reply) before any scoring work starts.
+    """
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    conn.settimeout(CONN_TIMEOUT_S)
+    while not stop.is_set():
+        try:
+            t, payload = wire.read_frame(conn)
+        except socket.timeout:
+            continue           # idle client: re-check stop flag, keep conn
+        except (ConnectionError, OSError):
+            break
+        except ValueError:     # oversized/corrupt frame: stream is not
+            break              # trustworthy past this point — drop it
+        if not t:
+            break              # clean EOF
+        try:
+            pairs, deadline_s = wire.decode_request_ex(t, payload)
+        except Exception as e:  # noqa: BLE001 — malformed request
+            try:
+                conn.sendall(wire.encode_error(str(e)))
+            except OSError:
+                break
+            continue
+        # The wire deadline is a relative budget (no cross-host clock), so
+        # the clock can only start when the frame is read: time spent in
+        # the kernel/connection queues before this point must be burned
+        # from the budget client-side (see benchmarks/loadgen.py) — a
+        # non-positive remaining budget sheds as "expired" here.
+        arrival = time.perf_counter()
+        deadline_abs = (arrival + deadline_s if deadline_s is not None
+                        else None)
+        if admission is not None:
+            reason = admission.try_admit(len(pairs), deadline_abs,
+                                         now=arrival)
+            if reason is not None:
+                # Back-pressure sheds are retriable MSG_SHED; a request
+                # that alone exceeds the queue bound never will be — make
+                # that a hard error so a backoff-and-retry client doesn't
+                # livelock on it.
+                if reason == SHED_TOO_LARGE:
+                    frame = wire.encode_error(
+                        f"batch of {len(pairs)} rows exceeds admission "
+                        f"bound {admission.max_queue_rows}")
+                else:
+                    frame = wire.encode_shed(reason)
+                try:
+                    conn.sendall(frame)
+                except OSError:
+                    break
+                continue
+        try:
+            try:
+                scores = handler.get_scores(pairs)
+                reply = wire.encode_reply([float(s) for s in scores])
+            finally:
+                if admission is not None:
+                    admission.release(len(pairs),
+                                      time.perf_counter() - arrival)
+            conn.sendall(reply)
+        except OSError:
+            break
+        except Exception as e:  # noqa: BLE001 — service boundary
+            try:
+                conn.sendall(wire.encode_error(str(e)))
+            except OSError:
+                break
+
+
+def _make_listener(host: str, port: int, backlog: int) -> socket.socket:
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    sock.bind((host, port))
+    sock.listen(backlog)
+    return sock
+
+
 class SimpleServer:
     """TSimpleServer: single thread, one connection at a time."""
 
-    def __init__(self, handler: QuestionAnsweringHandler, host: str = "127.0.0.1",
-                 port: int = 0):
+    def __init__(self, handler, host: str = "127.0.0.1", port: int = 0):
         self.handler = handler
-        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._sock.bind((host, port))
-        self._sock.listen(1)
+        self._sock = _make_listener(host, port, backlog=8)
         self.address = self._sock.getsockname()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -59,21 +154,10 @@ class SimpleServer:
                 conn, _ = self._sock.accept()
             except socket.timeout:
                 continue
+            except OSError:
+                break
             with conn:
-                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                while not self._stop.is_set():
-                    try:
-                        t, payload = wire.read_frame(conn)
-                    except (ConnectionError, socket.timeout):
-                        break
-                    if not t:
-                        break
-                    try:
-                        pairs = wire.decode_request(t, payload)
-                        scores = self.handler.get_scores(pairs)
-                        conn.sendall(wire.encode_reply([float(s) for s in scores]))
-                    except Exception as e:  # noqa: BLE001 — service boundary
-                        conn.sendall(wire.encode_error(str(e)))
+                _serve_connection(conn, self.handler, self._stop)
 
     def start_background(self) -> "SimpleServer":
         self._thread = threading.Thread(target=self.serve_forever, daemon=True)
@@ -87,22 +171,157 @@ class SimpleServer:
         self._sock.close()
 
 
+class ThreadPoolServer:
+    """TThreadPoolServer: fixed worker pool, one connection per worker.
+
+    Accepted connections queue until a worker frees up; each worker runs the
+    shared request loop against one handler (which must be thread-safe —
+    ``ReplicaPool`` and ``QuestionAnsweringHandler`` over a jit/numpy scorer
+    both are). Pass an ``AdmissionController`` to bound queueing and shed
+    expired/unmeetable requests with MSG_SHED replies.
+    """
+
+    def __init__(self, handler, host: str = "127.0.0.1", port: int = 0,
+                 num_workers: int = 8, admission=None, backlog: int = 128):
+        self.handler = handler
+        self.admission = admission
+        if admission is not None and hasattr(handler, "row_service_s"):
+            # Estimate waits from scorer-side service time, not request
+            # sojourn (which would double-count queueing).
+            admission.set_service_time_source(handler.row_service_s)
+        self.num_workers = num_workers
+        self._sock = _make_listener(host, port, backlog)
+        self.address = self._sock.getsockname()
+        self._stop = threading.Event()
+        self._conns: "queue.Queue[Optional[socket.socket]]" = queue.Queue()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._workers: list = []
+
+    def _accept_loop(self):
+        self._sock.settimeout(0.2)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            self._conns.put(conn)
+
+    def _worker_loop(self):
+        while not self._stop.is_set():
+            try:
+                conn = self._conns.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            if conn is None:
+                break
+            with conn:
+                _serve_connection(conn, self.handler, self._stop,
+                                  self.admission)
+
+    def _start_workers(self):
+        self._workers = [threading.Thread(target=self._worker_loop,
+                                          daemon=True)
+                         for _ in range(self.num_workers)]
+        for w in self._workers:
+            w.start()
+
+    def serve_forever(self):
+        """Run the accept loop in the calling thread (SimpleServer-style
+        foreground mode); workers still run in the background."""
+        self._start_workers()
+        self._accept_loop()
+
+    def start_background(self) -> "ThreadPoolServer":
+        self._accept_thread = threading.Thread(target=self._accept_loop,
+                                               daemon=True)
+        self._accept_thread.start()
+        self._start_workers()
+        return self
+
+    def stats(self) -> Dict[str, float]:
+        s: Dict[str, float] = {"num_workers": float(self.num_workers)}
+        if self.admission is not None:
+            s.update(self.admission.stats())
+        if hasattr(self.handler, "stats"):
+            s.update(self.handler.stats())
+        return s
+
+    def stop(self):
+        self._stop.set()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=2.0)
+        for _ in self._workers:
+            self._conns.put(None)
+        for w in self._workers:
+            w.join(timeout=2.0)
+        # Accepted-but-unserved connections would otherwise block their
+        # clients in recv forever: close them so reads fail fast.
+        while True:
+            try:
+                conn = self._conns.get_nowait()
+            except queue.Empty:
+                break
+            if conn is not None:
+                conn.close()
+        self._sock.close()
+
+
 class Client:
-    """Blocking single-connection client (the paper's single-thread client)."""
+    """Blocking single-connection client (the paper's single-thread client).
 
-    def __init__(self, address: Tuple[str, int]):
-        self._sock = socket.create_connection(address)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    Usable as a context manager; on ``ConnectionError`` (server restart, a
+    worker dropping the connection) one transparent reconnect + resend is
+    attempted per call, so load-generator worker loops survive server churn.
+    ``ShedError`` replies are NOT retried here — shedding is the server
+    telling the caller to back off, and retrying would defeat it.
+    """
 
-    def get_score(self, question: str, answer: str) -> float:
-        self._sock.sendall(wire.encode_get_score(question, answer))
+    def __init__(self, address: Tuple[str, int], reconnect: bool = True):
+        self.address = address
+        self.reconnect = reconnect
+        self._sock = self._connect()
+
+    def _connect(self) -> socket.socket:
+        sock = socket.create_connection(self.address)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def __enter__(self) -> "Client":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _roundtrip(self, frame: bytes):
+        self._sock.sendall(frame)
         t, payload = wire.read_frame(self._sock)
-        return wire.decode_reply(t, payload)[0]
-
-    def get_score_batch(self, pairs: Sequence[Tuple[str, str]]):
-        self._sock.sendall(wire.encode_get_score_batch(pairs))
-        t, payload = wire.read_frame(self._sock)
+        if not t:
+            raise ConnectionError("server closed connection")
         return wire.decode_reply(t, payload)
+
+    def _rpc(self, frame: bytes):
+        try:
+            return self._roundtrip(frame)
+        except (ConnectionError, OSError):
+            if not self.reconnect:
+                raise
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = self._connect()
+            return self._roundtrip(frame)
+
+    def get_score(self, question: str, answer: str,
+                  deadline_s: Optional[float] = None) -> float:
+        return self._rpc(wire.encode_get_score(question, answer,
+                                               deadline_s))[0]
+
+    def get_score_batch(self, pairs: Sequence[Tuple[str, str]],
+                        deadline_s: Optional[float] = None):
+        return self._rpc(wire.encode_get_score_batch(pairs, deadline_s))
 
     def close(self):
         self._sock.close()

@@ -10,19 +10,43 @@ IDL (mirrors Figure 2 of the paper):
 Frame: u32 payload_len | u8 msg_type | payload. Strings are u32-len-prefixed
 UTF-8. Doubles are little-endian f64. Field ids are implicit in order (the
 schema-evolution story is the header's version byte).
+
+Version history:
+
+  v1 — payload = u8 version | body
+  v2 — payload = u8 version | u8 flags | [f64 deadline_s] | body
+       FLAG_DEADLINE marks an optional per-request deadline budget in
+       seconds (relative to send time, so no cross-host clock is assumed).
+       Servers answering past-deadline or over-capacity requests reply with
+       MSG_SHED instead of queueing unboundedly.
+
+Both versions decode on a v2 server; a v1 client never sees MSG_SHED for
+its own requests unless the server queue is full (deadline-based shedding
+needs the v2 deadline field).
 """
 from __future__ import annotations
 
 import socket
 import struct
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-VERSION = 1
+VERSION = 2
+MIN_VERSION = 1
+FLAG_DEADLINE = 1
 MSG_GET_SCORE = 1
 MSG_GET_SCORE_BATCH = 2
 MSG_REPLY_SCORE = 101
 MSG_REPLY_SCORES = 102
+MSG_SHED = 254
 MSG_ERROR = 255
+
+#: Upper bound on a frame payload; a corrupt or hostile length prefix must
+#: not make the server try to buffer gigabytes.
+MAX_FRAME = 1 << 24
+
+
+class ShedError(RuntimeError):
+    """Request rejected by admission control (MSG_SHED) — retriable."""
 
 
 def _pack_str(s: str) -> bytes:
@@ -32,16 +56,27 @@ def _pack_str(s: str) -> bytes:
 
 def _unpack_str(buf: memoryview, off: int) -> Tuple[str, int]:
     (n,) = struct.unpack_from("<I", buf, off)
+    if off + 4 + n > len(buf):
+        raise ValueError(f"truncated string: need {n} bytes at offset {off}")
     return bytes(buf[off + 4:off + 4 + n]).decode(), off + 4 + n
 
 
-def encode_get_score(question: str, answer: str) -> bytes:
-    payload = bytes([VERSION]) + _pack_str(question) + _pack_str(answer)
+def _request_header(deadline_s: Optional[float]) -> bytes:
+    if deadline_s is None:
+        return bytes([VERSION, 0])
+    return bytes([VERSION, FLAG_DEADLINE]) + struct.pack("<d", deadline_s)
+
+
+def encode_get_score(question: str, answer: str,
+                     deadline_s: Optional[float] = None) -> bytes:
+    payload = (_request_header(deadline_s)
+               + _pack_str(question) + _pack_str(answer))
     return struct.pack("<IB", len(payload), MSG_GET_SCORE) + payload
 
 
-def encode_get_score_batch(pairs: Sequence[Tuple[str, str]]) -> bytes:
-    payload = bytes([VERSION]) + struct.pack("<I", len(pairs))
+def encode_get_score_batch(pairs: Sequence[Tuple[str, str]],
+                           deadline_s: Optional[float] = None) -> bytes:
+    payload = _request_header(deadline_s) + struct.pack("<I", len(pairs))
     for q, a in pairs:
         payload += _pack_str(q) + _pack_str(a)
     return struct.pack("<IB", len(payload), MSG_GET_SCORE_BATCH) + payload
@@ -60,36 +95,71 @@ def encode_error(msg: str) -> bytes:
     return struct.pack("<IB", len(payload), MSG_ERROR) + payload
 
 
+def encode_shed(reason: str) -> bytes:
+    payload = _pack_str(reason)
+    return struct.pack("<IB", len(payload), MSG_SHED) + payload
+
+
 def read_frame(sock: socket.socket) -> Tuple[int, bytes]:
-    head = _read_exact(sock, 5)
+    head = _read_exact(sock, 5)  # a timeout HERE means genuinely idle
     if not head:
         return 0, b""
     n, t = struct.unpack("<IB", head)
-    return t, _read_exact(sock, n)
+    if n > MAX_FRAME:
+        raise ValueError(f"frame length {n} exceeds MAX_FRAME {MAX_FRAME}")
+    try:
+        return t, _read_exact(sock, n)
+    except socket.timeout:
+        # Header consumed but payload never arrived: the stream is desynced
+        # for any retry, so surface a connection-level failure.
+        raise ConnectionError(
+            f"stalled reading {n}-byte payload after header") from None
 
 
 def _read_exact(sock: socket.socket, n: int) -> bytes:
     chunks = []
     got = 0
     while got < n:
-        c = sock.recv(n - got)
+        try:
+            c = sock.recv(n - got)
+        except socket.timeout:
+            if not chunks:
+                raise  # idle at a frame boundary: caller may retry cleanly
+            # Mid-frame stall: partial bytes are already consumed, so
+            # treating this as idle would desync the stream — the peer is
+            # broken or pathologically slow; drop the connection instead.
+            raise ConnectionError(
+                f"stalled mid-frame: got {got} of {n} bytes") from None
         if not c:
-            return b"" if not chunks else b"".join(chunks)
+            if not chunks:
+                return b""
+            raise ConnectionError(f"truncated frame: got {got} of {n} bytes")
         chunks.append(c)
         got += len(c)
     return b"".join(chunks)
 
 
-def decode_request(msg_type: int, payload: bytes) -> List[Tuple[str, str]]:
+def decode_request_ex(msg_type: int, payload: bytes
+                      ) -> Tuple[List[Tuple[str, str]], Optional[float]]:
+    """Decode a request frame into (pairs, deadline_s or None)."""
     buf = memoryview(payload)
     ver = buf[0]
-    if ver != VERSION:
-        raise ValueError(f"wire version {ver} != {VERSION}")
-    off = 1
+    if not MIN_VERSION <= ver <= VERSION:
+        raise ValueError(f"wire version {ver} outside "
+                         f"[{MIN_VERSION}, {VERSION}]")
+    deadline_s: Optional[float] = None
+    if ver == 1:
+        off = 1
+    else:
+        flags = buf[1]
+        off = 2
+        if flags & FLAG_DEADLINE:
+            (deadline_s,) = struct.unpack_from("<d", buf, off)
+            off += 8
     if msg_type == MSG_GET_SCORE:
         q, off = _unpack_str(buf, off)
         a, off = _unpack_str(buf, off)
-        return [(q, a)]
+        return [(q, a)], deadline_s
     if msg_type == MSG_GET_SCORE_BATCH:
         (n,) = struct.unpack_from("<I", buf, off)
         off += 4
@@ -98,8 +168,12 @@ def decode_request(msg_type: int, payload: bytes) -> List[Tuple[str, str]]:
             q, off = _unpack_str(buf, off)
             a, off = _unpack_str(buf, off)
             pairs.append((q, a))
-        return pairs
+        return pairs, deadline_s
     raise ValueError(f"unknown msg type {msg_type}")
+
+
+def decode_request(msg_type: int, payload: bytes) -> List[Tuple[str, str]]:
+    return decode_request_ex(msg_type, payload)[0]
 
 
 def decode_reply(msg_type: int, payload: bytes) -> List[float]:
@@ -108,6 +182,8 @@ def decode_reply(msg_type: int, payload: bytes) -> List[float]:
     if msg_type == MSG_REPLY_SCORES:
         (n,) = struct.unpack_from("<I", payload, 0)
         return list(struct.unpack_from(f"<{n}d", payload, 4))
+    if msg_type == MSG_SHED:
+        raise ShedError(f"request shed: {payload[4:].decode()}")
     if msg_type == MSG_ERROR:
         raise RuntimeError(f"server error: {payload[4:].decode()}")
     raise ValueError(f"unknown reply type {msg_type}")

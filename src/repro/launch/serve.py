@@ -1,7 +1,15 @@
 """Serving launcher: stand up the QA reranking service on any backend.
 
+  # paper-faithful single-threaded server
   PYTHONPATH=src python -m repro.launch.serve --backend aot --port 9090
-  (then drive it with repro.core.service.Client or examples/serve_pipeline)
+
+  # concurrent cluster: 4 replicas behind a thread-pool server with
+  # power-of-two-choices routing and a bounded admission queue
+  PYTHONPATH=src python -m repro.launch.serve --server threadpool \
+      --replicas 4 --policy p2c --max-queue 256 --port 9090
+
+  (then drive it with repro.core.service.Client, benchmarks/loadgen.py,
+  or examples/serve_pipeline.py)
 """
 from __future__ import annotations
 
@@ -10,6 +18,26 @@ import argparse
 from repro.launch.world import build_world
 from repro.core import backends as BK
 from repro.core import service as SV
+from repro.serving.admission import AdmissionController
+from repro.serving.cluster import POLICIES, ReplicaPool
+
+
+def build_server(args, cfg, params, corpus, tok):
+    """Build (server, pool-or-None) from parsed CLI args."""
+    if args.server == "simple":
+        scorer = BK.make_scorer(args.backend, params, cfg,
+                                buckets=(1, 8, 64, 256))
+        handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
+                                              cfg.max_len)
+        return SV.SimpleServer(handler, host=args.host, port=args.port), None
+    pool = ReplicaPool.build(args.backend, params, cfg, tok, corpus.idf,
+                             n_replicas=args.replicas,
+                             buckets=(1, 8, 64, 256), policy=args.policy)
+    admission = (AdmissionController(max_queue_rows=args.max_queue)
+                 if args.max_queue > 0 else None)
+    srv = SV.ThreadPoolServer(pool, host=args.host, port=args.port,
+                              num_workers=args.workers, admission=admission)
+    return srv, pool
 
 
 def main():
@@ -18,17 +46,34 @@ def main():
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--server", default="simple",
+                    choices=["simple", "threadpool"],
+                    help="simple = paper's TSimpleServer; threadpool = "
+                         "concurrent worker pool over a replica cluster")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="scorer replicas behind the threadpool server")
+    ap.add_argument("--policy", default="least_outstanding",
+                    choices=list(POLICIES), help="replica routing policy")
+    ap.add_argument("--max-queue", type=int, default=512,
+                    help="admission bound on outstanding rows "
+                         "(0 disables admission control)")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="threadpool connection workers")
     args = ap.parse_args()
 
     cfg, params, corpus, tok, index, _ = build_world(args.train_steps)
-    scorer = BK.make_scorer(args.backend, params, cfg, buckets=(1, 8, 64, 256))
-    handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf, cfg.max_len)
-    srv = SV.SimpleServer(handler, host=args.host, port=args.port)
-    print(f"serving QuestionAnswering ({args.backend}) on {srv.address}")
+    srv, pool = build_server(args, cfg, params, corpus, tok)
+    mode = (f"{args.server}" if args.server == "simple" else
+            f"{args.server} x{args.replicas} {args.policy} "
+            f"max_queue={args.max_queue}")
+    print(f"serving QuestionAnswering ({args.backend}, {mode}) "
+          f"on {srv.address}")
     try:
         srv.serve_forever()
     except KeyboardInterrupt:
         srv.stop()
+        if pool is not None:
+            pool.stop()
 
 
 if __name__ == "__main__":

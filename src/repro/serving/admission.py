@@ -1,0 +1,126 @@
+"""Deadline-aware admission control for the serving cluster.
+
+Four shed conditions, checked in order at the RPC boundary (before any
+featurization or scorer work is spent on the request):
+
+  expired     — the client's deadline already passed while the request sat
+                in the kernel/server queues; scoring it would waste a slot
+                on an answer nobody is waiting for.
+  too_large   — the request ALONE exceeds ``max_queue_rows``: permanent,
+                reported as a hard error (retrying can never help).
+  queue_full  — admitting the request would push the cluster-wide
+                outstanding row count past ``max_queue_rows``; bounding the
+                queue bounds p99 under overload (shed fast, don't buffer).
+  late        — the per-row service-time estimate predicts the request
+                would complete after its deadline even if admitted now.
+                The estimate prefers a scorer-side source (see
+                ``set_service_time_source`` / ``ReplicaPool.row_service_s``
+                — pure compute time, no queue wait); the fallback is an
+                EWMA of observed request sojourn, which is conservative
+                under load (it includes queueing, which the wait formula
+                also models).
+
+``try_admit`` returns ``None`` and takes an outstanding-rows reservation on
+admission, or the shed reason string; every admitted request must be paired
+with exactly one ``release`` (use try/finally) which also feeds the service
+time estimate. All state is behind one lock — the controller is shared by
+every server worker thread.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+SHED_EXPIRED = "expired"
+SHED_QUEUE_FULL = "queue_full"
+SHED_LATE = "late"
+#: Permanent rejection (not back-pressure): the request alone exceeds
+#: max_queue_rows, so no amount of client backoff would ever admit it.
+#: Servers should answer with a hard error, not a retriable MSG_SHED.
+SHED_TOO_LARGE = "too_large"
+
+
+class AdmissionController:
+    def __init__(self, max_queue_rows: int = 1024,
+                 ewma_alpha: float = 0.1,
+                 init_row_service_s: float = 1e-3,
+                 service_time_source: Optional[Callable[[],
+                                               Optional[float]]] = None):
+        self.max_queue_rows = max_queue_rows
+        self._alpha = ewma_alpha
+        self._row_service_s = init_row_service_s
+        self._service_source = service_time_source
+        self._outstanding_rows = 0
+        self._admitted = 0
+        self._shed: Dict[str, int] = {SHED_EXPIRED: 0, SHED_QUEUE_FULL: 0,
+                                      SHED_LATE: 0, SHED_TOO_LARGE: 0}
+        self._lock = threading.Lock()
+
+    def set_service_time_source(self, source: Callable[[],
+                                                       Optional[float]]):
+        """Install a scorer-side per-row service-time estimate (e.g.
+        ``ReplicaPool.row_service_s``). Preferred over the internal request
+        EWMA, which measures sojourn (queue wait + service) and so would
+        double-count queueing in the wait estimate under load."""
+        self._service_source = source
+
+    def _per_row_s(self) -> float:
+        if self._service_source is not None:
+            est = self._service_source()
+            if est is not None:
+                return est
+        return self._row_service_s
+
+    def estimated_wait_s(self, n_rows: int) -> float:
+        """Predicted completion time for ``n_rows`` more rows, from the
+        outstanding backlog and the per-row service-time estimate."""
+        with self._lock:
+            return (self._outstanding_rows + n_rows) * self._per_row_s()
+
+    def try_admit(self, n_rows: int,
+                  deadline_abs: Optional[float] = None,
+                  now: Optional[float] = None) -> Optional[str]:
+        """Admit (reserve rows, return None) or return a shed reason."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            if deadline_abs is not None and now >= deadline_abs:
+                self._shed[SHED_EXPIRED] += 1
+                return SHED_EXPIRED
+            if n_rows > self.max_queue_rows:
+                self._shed[SHED_TOO_LARGE] += 1
+                return SHED_TOO_LARGE
+            if self._outstanding_rows + n_rows > self.max_queue_rows:
+                self._shed[SHED_QUEUE_FULL] += 1
+                return SHED_QUEUE_FULL
+            if deadline_abs is not None:
+                est = (self._outstanding_rows + n_rows) * self._per_row_s()
+                if now + est > deadline_abs:
+                    self._shed[SHED_LATE] += 1
+                    return SHED_LATE
+            self._outstanding_rows += n_rows
+            self._admitted += 1
+            return None
+
+    def release(self, n_rows: int, service_s: Optional[float] = None):
+        """Return an admitted request's rows; feed the service-time EWMA."""
+        with self._lock:
+            self._outstanding_rows = max(self._outstanding_rows - n_rows, 0)
+            if service_s is not None and n_rows > 0:
+                per_row = service_s / n_rows
+                self._row_service_s += self._alpha * (per_row
+                                                      - self._row_service_s)
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            s = {f"shed_{k}": float(v) for k, v in self._shed.items()}
+            s.update({
+                "admitted": float(self._admitted),
+                "shed_total": float(sum(self._shed.values())),
+                # Prefixed: ReplicaPool.stats() also reports an
+                # "outstanding_rows" (batcher-enqueued rows); this one is
+                # the reservation count gated against max_queue_rows.
+                "admission_outstanding_rows": float(self._outstanding_rows),
+                "row_service_ms": self._per_row_s() * 1e3,
+            })
+        return s

@@ -22,6 +22,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import List, Optional
 
@@ -57,16 +58,53 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self._q: "queue.Queue[Optional[_Item]]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._outstanding_rows = 0
+        self._rows_scored = 0
+        self._row_scorer_s: Optional[float] = None
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._running = True
         self._thread.start()
-        self.batch_sizes: List[int] = []
+        # Sliding window: bounds memory over a long-running server's life.
+        self.batch_sizes: "deque[int]" = deque(maxlen=4096)
+
+    @property
+    def outstanding_rows(self) -> int:
+        """Rows enqueued or in flight — the load-balancing signal."""
+        with self._lock:
+            return self._outstanding_rows
+
+    @property
+    def row_scorer_s(self) -> Optional[float]:
+        """EWMA of pure scorer time per row (no queue wait) — the service
+        time admission control should estimate waits from. None until the
+        first batch completes."""
+        with self._lock:
+            return self._row_scorer_s
+
+    def _enqueue(self, item: "_Item") -> "Future":
+        # The running check and the put must be one atomic step: otherwise
+        # an item slipped in after stop()'s drain would never resolve.
+        with self._lock:
+            if not self._running:
+                item.future.set_exception(RuntimeError("MicroBatcher "
+                                                       "stopped"))
+                return item.future
+            self._outstanding_rows += item.n
+            item.future.add_done_callback(
+                lambda _f, n=item.n: self._settle(n))
+            self._q.put(item)
+        return item.future
+
+    def _settle(self, n: int):
+        # Runs on failure too (set_exception), so only the outstanding
+        # count settles here; rows_scored counts successes in _loop.
+        with self._lock:
+            self._outstanding_rows -= n
 
     def submit(self, q_tok: np.ndarray, a_tok: np.ndarray,
                feats: np.ndarray) -> "Future[float]":
-        item = _Item(q_tok, a_tok, feats, single=True)
-        self._q.put(item)
-        return item.future
+        return self._enqueue(_Item(q_tok, a_tok, feats, single=True))
 
     def submit_many(self, q_tok: np.ndarray, a_tok: np.ndarray,
                     feats: np.ndarray) -> "Future[np.ndarray]":
@@ -76,8 +114,7 @@ class MicroBatcher:
         if item.n == 0:
             item.future.set_result(np.zeros((0,), np.float32))
             return item.future
-        self._q.put(item)
-        return item.future
+        return self._enqueue(item)
 
     def score(self, q_tok, a_tok, feats) -> float:
         return self.submit(q_tok, a_tok, feats).result()
@@ -115,8 +152,16 @@ class MicroBatcher:
                 q = np.concatenate([i.q_tok for i in items])
                 a = np.concatenate([i.a_tok for i in items])
                 f = np.concatenate([i.feats for i in items])
+                t0 = time.perf_counter()
                 scores = np.asarray(self.scorer(q, a, f))
-                self.batch_sizes.append(int(q.shape[0]))
+                per_row = (time.perf_counter() - t0) / q.shape[0]
+                with self._lock:
+                    self._row_scorer_s = (
+                        per_row if self._row_scorer_s is None
+                        else self._row_scorer_s
+                        + 0.2 * (per_row - self._row_scorer_s))
+                    self._rows_scored += int(q.shape[0])
+                    self.batch_sizes.append(int(q.shape[0]))
                 offset = 0
                 for i in items:
                     seg = scores[offset:offset + i.n]
@@ -128,7 +173,29 @@ class MicroBatcher:
                     if not i.future.done():
                         i.future.set_exception(e)
 
+    def stats(self) -> dict:
+        with self._lock:
+            rows, out = self._rows_scored, self._outstanding_rows
+            sizes = list(self.batch_sizes)  # snapshot: worker appends
+        return {
+            "rows_scored": float(rows),
+            "outstanding_rows": float(out),
+            "batches": float(len(sizes)),
+            "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
+        }
+
     def stop(self):
-        self._running = False
+        with self._lock:  # after this, _enqueue fails fast — see above
+            self._running = False
         self._q.put(None)
         self._thread.join(timeout=2.0)
+        # Fail any items the worker never reached: leaving their futures
+        # unresolved would hang callers blocked in .result() forever.
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None and not item.future.done():
+                item.future.set_exception(RuntimeError("MicroBatcher "
+                                                       "stopped"))

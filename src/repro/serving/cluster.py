@@ -1,0 +1,153 @@
+"""Replica pool: N independent scorer replicas behind one scoring interface.
+
+Each replica owns a ``MicroBatcher`` worker thread, so the pool overlaps N
+scorer dispatches while every replica still coalesces its own micro-batches.
+Featurization goes through one shared ``FeaturizationCache`` (pure function
+of the strings — sharing only raises the hit rate; the per-replica state is
+the batcher queue).
+
+Routing policies (``POLICIES``):
+
+  round_robin        — rotate replicas; oblivious to load.
+  least_outstanding  — route to the replica with the fewest enqueued/in-
+                       flight rows; best tail latency, O(N) scan per pick.
+  p2c                — power-of-two-choices: sample two replicas, take the
+                       less loaded; near-least-outstanding tails at O(1)
+                       cost (Mitzenmacher's classic result).
+
+``get_scores`` is the ``QuestionAnsweringHandler``-compatible entry point,
+so a pool drops straight into ``core.service`` servers.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.featurize import FeaturizationCache
+from repro.data.tokenizer import HashingTokenizer
+from repro.serving.batcher import MicroBatcher
+from repro.serving.stats import LatencyTracker
+
+POLICIES = ("round_robin", "least_outstanding", "p2c")
+
+
+class Replica:
+    """One scorer + its micro-batching worker + counters."""
+
+    def __init__(self, scorer, name: str, max_batch: int, max_wait_s: float):
+        self.name = name
+        self.batcher = MicroBatcher(scorer, max_batch, max_wait_s)
+        self.requests = 0
+
+    @property
+    def outstanding_rows(self) -> int:
+        return self.batcher.outstanding_rows
+
+    def stats(self) -> Dict[str, float]:
+        s = self.batcher.stats()
+        s["requests"] = float(self.requests)
+        return s
+
+
+class ReplicaPool:
+    def __init__(self, scorers: Sequence, tokenizer: HashingTokenizer,
+                 idf: Dict[str, float], max_len: int,
+                 policy: str = "least_outstanding",
+                 max_batch: int = 64, max_wait_s: float = 0.002,
+                 cache_capacity: int = 8192, seed: int = 0):
+        if not scorers:
+            raise ValueError("ReplicaPool needs at least one scorer")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.policy = policy
+        self.features = FeaturizationCache(tokenizer, idf, max_len,
+                                           cache_capacity)
+        self.replicas = [Replica(s, f"replica{i}", max_batch, max_wait_s)
+                         for i, s in enumerate(scorers)]
+        self.tracker = LatencyTracker()
+        self._lock = threading.Lock()
+        self._rr = 0
+        self._rng = random.Random(seed)
+
+    @classmethod
+    def build(cls, backend: str, params, cfg, tokenizer: HashingTokenizer,
+              idf: Dict[str, float], n_replicas: int = 2,
+              buckets: Sequence[int] = (1, 8, 64), **kw) -> "ReplicaPool":
+        """Convenience: N fresh scorer instances of one backend."""
+        from repro.core import backends as BK
+        scorers = [BK.make_scorer(backend, params, cfg, buckets=buckets)
+                   for _ in range(n_replicas)]
+        return cls(scorers, tokenizer, idf, cfg.max_len, **kw)
+
+    def _pick(self) -> Replica:
+        reps = self.replicas
+        if len(reps) == 1:
+            chosen = reps[0]
+        elif self.policy == "round_robin":
+            with self._lock:
+                chosen = reps[self._rr % len(reps)]
+                self._rr += 1
+        elif self.policy == "least_outstanding":
+            chosen = min(reps, key=lambda r: r.outstanding_rows)
+        else:  # p2c
+            with self._lock:
+                a, b = self._rng.sample(range(len(reps)), 2)
+            chosen = min(reps[a], reps[b], key=lambda r: r.outstanding_rows)
+        with self._lock:
+            chosen.requests += 1
+        return chosen
+
+    def _featurize_batch(self, pairs: Sequence[Tuple[str, str]]):
+        rows = [self.features.featurize(q, a) for q, a in pairs]
+        return (np.stack([r[0] for r in rows]),
+                np.stack([r[1] for r in rows]),
+                np.stack([r[2] for r in rows]))
+
+    def submit(self, pairs: Sequence[Tuple[str, str]]):
+        """Route one request's pairs to a replica; returns the future."""
+        q_tok, a_tok, feats = self._featurize_batch(pairs)
+        return self._pick().batcher.submit_many(q_tok, a_tok, feats)
+
+    def get_scores(self, pairs: Sequence[Tuple[str, str]]) -> np.ndarray:
+        """``QuestionAnsweringHandler``-compatible blocking entry point."""
+        if not pairs:
+            return np.zeros((0,), np.float32)
+        t0 = time.perf_counter()
+        out = np.asarray(self.submit(pairs).result())
+        self.tracker.observe(time.perf_counter() - t0, n=len(pairs))
+        return out
+
+    def get_score(self, question: str, answer: str) -> float:
+        return float(self.get_scores([(question, answer)])[0])
+
+    def outstanding_rows(self) -> int:
+        return sum(r.outstanding_rows for r in self.replicas)
+
+    def row_service_s(self) -> Optional[float]:
+        """Cluster-wide per-row service-time estimate for admission control:
+        mean scorer-side per-row time over warmed replicas, divided by the
+        replica count (replicas drain the backlog in parallel). None until
+        some replica has scored a batch."""
+        obs = [r.batcher.row_scorer_s for r in self.replicas]
+        obs = [o for o in obs if o is not None]
+        if not obs:
+            return None
+        return (sum(obs) / len(obs)) / len(self.replicas)
+
+    def stats(self) -> Dict[str, float]:
+        s = self.tracker.summary()
+        s["n_replicas"] = float(len(self.replicas))
+        s["outstanding_rows"] = float(self.outstanding_rows())
+        for r in self.replicas:
+            for k, v in r.stats().items():
+                s[f"{r.name}_{k}"] = v
+        s.update(self.features.stats())
+        return s
+
+    def stop(self):
+        for r in self.replicas:
+            r.batcher.stop()

@@ -58,8 +58,7 @@ class ServingEngine:
 
     def stats(self) -> Dict[str, float]:
         s = self.tracker.summary()
-        sizes = self.batcher.batch_sizes
-        s["mean_batch"] = float(np.mean(sizes)) if sizes else 0.0
+        s.update(self.batcher.stats())  # mean_batch, rows, queue depth
         s.update(self.features.stats())
         return s
 

@@ -1,32 +1,60 @@
-"""Serving-side latency/throughput accounting (the paper's Table 2 columns)."""
+"""Serving-side latency/throughput accounting (the paper's Table 2 columns).
+
+``LatencyTracker`` is hammered concurrently by every server worker thread and
+replica completion callback, so ``observe``/``summary``/``percentile`` hold a
+lock; percentiles use linear interpolation between order statistics (the
+numpy default) rather than floor-indexing, so small sample counts don't bias
+p99 low.
+"""
 from __future__ import annotations
 
+import threading
 import time
+from collections import deque
 from typing import Dict, List
 
 
 class LatencyTracker:
-    def __init__(self):
-        self._samples: List[float] = []
+    """``max_samples`` bounds memory for long-running servers: percentiles
+    are computed over a sliding window of the most recent observations
+    (count/qps remain all-time)."""
+
+    def __init__(self, max_samples: int = 65536):
+        self._samples: "deque[float]" = deque(maxlen=max_samples)
         self._started = time.perf_counter()
         self._count = 0
+        self._lock = threading.Lock()
 
     def observe(self, seconds: float, n: int = 1):
-        self._samples.append(seconds)
-        self._count += n
+        with self._lock:
+            self._samples.append(seconds)
+            self._count += n
+
+    @staticmethod
+    def _interp_percentile(xs: List[float], q: float) -> float:
+        """Linear interpolation between closest ranks (xs must be sorted)."""
+        if not xs:
+            return 0.0
+        pos = q * (len(xs) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(xs) - 1)
+        frac = pos - lo
+        return xs[lo] * (1.0 - frac) + xs[hi] * frac
 
     def percentile(self, q: float) -> float:
-        if not self._samples:
-            return 0.0
-        xs = sorted(self._samples)
-        return xs[min(int(q * (len(xs) - 1)), len(xs) - 1)]
+        with self._lock:
+            xs = sorted(self._samples)
+        return self._interp_percentile(xs, q)
 
     def summary(self) -> Dict[str, float]:
+        with self._lock:
+            xs = sorted(self._samples)
+            count = self._count
         elapsed = max(time.perf_counter() - self._started, 1e-9)
         return {
-            "count": float(self._count),
-            "qps": self._count / elapsed,
-            "p50_ms": self.percentile(0.50) * 1e3,
-            "p90_ms": self.percentile(0.90) * 1e3,
-            "p99_ms": self.percentile(0.99) * 1e3,
+            "count": float(count),
+            "qps": count / elapsed,
+            "p50_ms": self._interp_percentile(xs, 0.50) * 1e3,
+            "p90_ms": self._interp_percentile(xs, 0.90) * 1e3,
+            "p99_ms": self._interp_percentile(xs, 0.99) * 1e3,
         }

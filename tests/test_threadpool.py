@@ -1,0 +1,206 @@
+"""ThreadPoolServer: concurrency, SimpleServer score parity, shedding,
+deadline handling, cross-version clients, shutdown, client reconnect."""
+import socket
+import struct
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import backends as BK
+from repro.core import service as SV
+from repro.core import wire
+from repro.data import qa as QA
+from repro.data.tokenizer import HashingTokenizer
+from repro.models import sm_cnn
+from repro.serving.admission import AdmissionController
+from repro.serving.cluster import ReplicaPool
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_config("sm-cnn"))
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    corpus = QA.generate_corpus(n_docs=20, n_questions=5, seed=7)
+    tok = HashingTokenizer(cfg.vocab_size)
+    return cfg, params, corpus, tok
+
+
+class SlowHandler:
+    """Deterministic handler with a fixed service time, for shed tests."""
+
+    def __init__(self, delay_s: float):
+        self.delay_s = delay_s
+
+    def get_scores(self, pairs):
+        time.sleep(self.delay_s)
+        return np.arange(len(pairs), dtype=np.float64)
+
+
+def _requests(corpus, n):
+    return [(corpus.questions[i % len(corpus.questions)],
+             corpus.documents[i % len(corpus.documents)][0])
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("backend", ["jit", "numpy"])
+def test_threadpool_pool_scores_identical_to_simple_server(world, backend):
+    """Acceptance: cluster path == sequential SimpleServer path, same
+    backend, same requests."""
+    cfg, params, corpus, tok = world
+    reqs = _requests(corpus, 10)
+
+    scorer = BK.make_scorer(backend, params, cfg, buckets=(1, 8, 64))
+    handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
+                                          cfg.max_len)
+    simple = SV.SimpleServer(handler).start_background()
+    with SV.Client(simple.address) as cl:
+        want = [cl.get_score(q, a) for q, a in reqs]
+        want_batch = cl.get_score_batch(reqs)
+    simple.stop()
+
+    pool = ReplicaPool.build(backend, params, cfg, tok, corpus.idf,
+                             n_replicas=2, buckets=(1, 8, 64))
+    srv = SV.ThreadPoolServer(pool, num_workers=4,
+                              admission=AdmissionController(1024)
+                              ).start_background()
+    with SV.Client(srv.address) as cl:
+        got = [cl.get_score(q, a) for q, a in reqs]
+        got_batch = cl.get_score_batch(reqs)
+    srv.stop()
+    pool.stop()
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    np.testing.assert_allclose(got_batch, want_batch, rtol=0, atol=0)
+
+
+def test_threadpool_concurrent_clients_all_correct(world):
+    cfg, params, corpus, tok = world
+    reqs = _requests(corpus, 8)
+    pool = ReplicaPool.build("jit", params, cfg, tok, corpus.idf,
+                             n_replicas=2, buckets=(1, 8, 64))
+    scorer = BK.make_scorer("jit", params, cfg, buckets=(1, 8, 64))
+    direct = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
+                                         cfg.max_len)
+    want = direct.get_scores(reqs)
+    srv = SV.ThreadPoolServer(pool, num_workers=6).start_background()
+    results = {}
+
+    def client(i):
+        with SV.Client(srv.address) as cl:
+            results[i] = [cl.get_score(q, a, deadline_s=30.0)
+                          for q, a in reqs]
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    srv.stop()
+    pool.stop()
+    assert len(results) == 6
+    for got in results.values():
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_threadpool_sheds_on_queue_full():
+    handler = SlowHandler(0.15)
+    srv = SV.ThreadPoolServer(handler, num_workers=6,
+                              admission=AdmissionController(max_queue_rows=1)
+                              ).start_background()
+    outcomes = []
+    lock = threading.Lock()
+
+    def client():
+        with SV.Client(srv.address) as cl:
+            try:
+                cl.get_score("q", "a")
+                with lock:
+                    outcomes.append("ok")
+            except wire.ShedError:
+                with lock:
+                    outcomes.append("shed")
+
+    threads = [threading.Thread(target=client) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    stats = srv.stats()
+    srv.stop()
+    assert outcomes.count("ok") >= 1
+    assert outcomes.count("shed") >= 1       # bounded queue shed the rest
+    assert stats["shed_queue_full"] == outcomes.count("shed")
+
+
+def test_threadpool_sheds_expired_deadline():
+    srv = SV.ThreadPoolServer(SlowHandler(0.0), num_workers=2,
+                              admission=AdmissionController(1024)
+                              ).start_background()
+    with SV.Client(srv.address) as cl:
+        with pytest.raises(wire.ShedError, match="expired"):
+            cl.get_score("q", "a", deadline_s=0.0)
+        # The connection survives a shed; a sane deadline then succeeds.
+        assert cl.get_score("q", "a", deadline_s=30.0) == 0.0
+    stats = srv.stats()
+    srv.stop()
+    assert stats["shed_expired"] == 1
+
+
+def test_threadpool_oversized_batch_is_hard_error_not_shed():
+    srv = SV.ThreadPoolServer(SlowHandler(0.0), num_workers=2,
+                              admission=AdmissionController(max_queue_rows=4)
+                              ).start_background()
+    with SV.Client(srv.address) as cl:
+        with pytest.raises(RuntimeError, match="exceeds admission bound"):
+            try:
+                cl.get_score_batch([("q", "a")] * 5)
+            except wire.ShedError:          # must NOT be the retriable kind
+                pytest.fail("oversized batch shed as retriable")
+        # Connection unharmed; a request within the bound still works.
+        assert list(cl.get_score_batch([("q", "a")] * 3)) == [0.0, 1.0, 2.0]
+    srv.stop()
+
+
+def test_threadpool_serves_old_version_client():
+    """A v1 (pre-deadline) frame hand-rolled on a raw socket still scores."""
+    srv = SV.ThreadPoolServer(SlowHandler(0.0),
+                              num_workers=2).start_background()
+    payload = bytes([1]) + wire._pack_str("old q") + wire._pack_str("old a")
+    frame = struct.pack("<IB", len(payload), wire.MSG_GET_SCORE) + payload
+    with socket.create_connection(srv.address) as s:
+        s.sendall(frame)
+        t, reply = wire.read_frame(s)
+    srv.stop()
+    assert wire.decode_reply(t, reply) == [0.0]
+
+
+def test_simple_server_stop_not_blocked_by_silent_client():
+    """Satellite: a connected-but-silent client must not hang ``stop()``."""
+    srv = SV.SimpleServer(SlowHandler(0.0)).start_background()
+    silent = socket.create_connection(srv.address)
+    time.sleep(0.3)  # let the server accept and enter its read loop
+    t0 = time.perf_counter()
+    srv.stop()
+    elapsed = time.perf_counter() - t0
+    silent.close()
+    assert elapsed < 1.9                 # within the 2s join budget
+    assert not srv._thread.is_alive()
+
+
+def test_client_context_manager_and_reconnect():
+    srv = SV.ThreadPoolServer(SlowHandler(0.0),
+                              num_workers=2).start_background()
+    with SV.Client(srv.address) as cl:
+        assert cl.get_score("q", "a") == 0.0
+        # Simulate a server-side connection drop mid-session: the next call
+        # must transparently reconnect and succeed.
+        cl._sock.close()
+        assert cl.get_score("q", "a") == 0.0
+    cl2 = SV.Client(srv.address, reconnect=False)
+    cl2._sock.close()
+    with pytest.raises((ConnectionError, OSError)):
+        cl2.get_score("q", "a")
+    srv.stop()

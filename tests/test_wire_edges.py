@@ -1,0 +1,181 @@
+"""Wire protocol edge cases: truncation, hostile lengths, unknown types,
+error/shed frames, and cross-version compatibility of the deadline field."""
+import socket
+import struct
+
+import pytest
+
+from repro.core import wire
+
+
+def _frame_parts(frame: bytes):
+    return frame[4], frame[5:]
+
+
+# ---------------------------------------------------------------- truncation
+
+def test_read_frame_truncated_payload_raises():
+    a, b = socket.socketpair()
+    try:
+        frame = wire.encode_get_score("question", "answer")
+        a.sendall(frame[:-3])  # drop the tail of the payload
+        a.close()
+        with pytest.raises(ConnectionError, match="truncated"):
+            wire.read_frame(b)
+    finally:
+        b.close()
+
+
+def test_read_frame_truncated_header_raises():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"\x01\x02")  # 2 of the 5 header bytes
+        a.close()
+        with pytest.raises(ConnectionError, match="truncated"):
+            wire.read_frame(b)
+    finally:
+        b.close()
+
+
+def test_read_frame_idle_timeout_at_boundary_is_retryable():
+    a, b = socket.socketpair()
+    b.settimeout(0.05)
+    try:
+        with pytest.raises(socket.timeout):
+            wire.read_frame(b)        # nothing sent: caller may retry
+        a.sendall(wire.encode_get_score("q", "a"))
+        t, payload = wire.read_frame(b)
+        assert wire.decode_request(t, payload) == [("q", "a")]
+    finally:
+        a.close()
+        b.close()
+
+
+def test_read_frame_mid_frame_stall_drops_connection():
+    # A stall after partial bytes must NOT look idle: retrying would parse
+    # the remaining payload as a fresh frame header (stream desync).
+    a, b = socket.socketpair()
+    b.settimeout(0.05)
+    try:
+        frame = wire.encode_get_score("question", "answer")
+        a.sendall(frame[:7])          # header + 2 payload bytes, then silence
+        with pytest.raises(ConnectionError, match="stalled"):
+            wire.read_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_read_frame_clean_eof_returns_zero():
+    a, b = socket.socketpair()
+    a.close()
+    try:
+        t, payload = wire.read_frame(b)
+        assert t == 0 and payload == b""
+    finally:
+        b.close()
+
+
+def test_read_frame_oversized_length_prefix_raises():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("<IB", wire.MAX_FRAME + 1, wire.MSG_GET_SCORE))
+        with pytest.raises(ValueError, match="MAX_FRAME"):
+            wire.read_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_decode_oversized_inner_string_length_raises():
+    # A string length prefix claiming more bytes than the payload holds must
+    # not read past the buffer.
+    payload = bytes([wire.VERSION, 0]) + struct.pack("<I", 1 << 20) + b"hi"
+    with pytest.raises(ValueError, match="truncated string"):
+        wire.decode_request(wire.MSG_GET_SCORE, payload)
+
+
+# ------------------------------------------------------------- unknown types
+
+def test_unknown_request_type_raises():
+    t, payload = _frame_parts(wire.encode_get_score("q", "a"))
+    with pytest.raises(ValueError, match="unknown msg type"):
+        wire.decode_request(77, payload)
+
+
+def test_unknown_reply_type_raises():
+    with pytest.raises(ValueError, match="unknown reply type"):
+        wire.decode_reply(78, b"\x00" * 8)
+
+
+def test_unsupported_version_raises():
+    payload = bytes([wire.VERSION + 1, 0])
+    with pytest.raises(ValueError, match="wire version"):
+        wire.decode_request(wire.MSG_GET_SCORE, payload)
+
+
+# ------------------------------------------------------- error / shed frames
+
+def test_error_frame_roundtrip():
+    t, payload = _frame_parts(wire.encode_error("kaboom: 42"))
+    assert t == wire.MSG_ERROR
+    with pytest.raises(RuntimeError, match="kaboom: 42"):
+        wire.decode_reply(t, payload)
+
+
+def test_shed_frame_roundtrip():
+    t, payload = _frame_parts(wire.encode_shed("queue_full"))
+    assert t == wire.MSG_SHED
+    with pytest.raises(wire.ShedError, match="queue_full"):
+        wire.decode_reply(t, payload)
+
+
+def test_shed_error_is_distinct_from_generic_error():
+    assert issubclass(wire.ShedError, RuntimeError)
+    t, payload = _frame_parts(wire.encode_error("not a shed"))
+    with pytest.raises(RuntimeError) as ei:
+        wire.decode_reply(t, payload)
+    assert not isinstance(ei.value, wire.ShedError)
+
+
+# ------------------------------------------------- versioning / deadline
+
+def _v1_get_score_frame(q: str, a: str) -> bytes:
+    """Hand-rolled version-1 frame (what a pre-deadline client sends)."""
+    payload = bytes([1]) + wire._pack_str(q) + wire._pack_str(a)
+    return struct.pack("<IB", len(payload), wire.MSG_GET_SCORE) + payload
+
+
+def test_old_version_frame_decodes_without_deadline():
+    t, payload = _frame_parts(_v1_get_score_frame("old q", "old a"))
+    pairs, deadline = wire.decode_request_ex(t, payload)
+    assert pairs == [("old q", "old a")]
+    assert deadline is None
+
+
+def test_v2_frame_without_deadline():
+    t, payload = _frame_parts(wire.encode_get_score("q", "a"))
+    pairs, deadline = wire.decode_request_ex(t, payload)
+    assert pairs == [("q", "a")]
+    assert deadline is None
+
+
+def test_v2_deadline_roundtrip_single_and_batch():
+    t, payload = _frame_parts(wire.encode_get_score("q", "a",
+                                                    deadline_s=0.125))
+    pairs, deadline = wire.decode_request_ex(t, payload)
+    assert pairs == [("q", "a")] and deadline == 0.125
+    batch = [(f"q{i}", f"a{i}") for i in range(3)]
+    t, payload = _frame_parts(wire.encode_get_score_batch(batch,
+                                                          deadline_s=2.5))
+    pairs, deadline = wire.decode_request_ex(t, payload)
+    assert pairs == batch and deadline == 2.5
+
+
+def test_decode_request_back_compat_helper():
+    # decode_request (no deadline in the signature) still works on both
+    # versions — existing call sites don't care about deadlines.
+    t, payload = _frame_parts(wire.encode_get_score("q", "a", deadline_s=1.0))
+    assert wire.decode_request(t, payload) == [("q", "a")]
+    t, payload = _frame_parts(_v1_get_score_frame("q", "a"))
+    assert wire.decode_request(t, payload) == [("q", "a")]
