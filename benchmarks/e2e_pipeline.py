@@ -1,20 +1,23 @@
 """End-to-end multi-stage QA pipeline throughput (the paper's deployment
 context): BM25 retrieval -> (optional cutoff) -> CNN rerank, per backend.
 
-Each backend is measured two ways over the same stages:
+Each condition declares ONE pipeline with the operator algebra
+(``repro.core.ops``) and measures two lowerings of it (``repro.core.plan``):
 
-  sequential — ``MultiStageRanker.run`` per query (per-query scorer
-               dispatch, query re-encoded once per candidate);
-  batched    — ``BatchedMultiStageRanker.run_batch`` over a 32-query batch
-               (one coalesced BM25 scoring call, one featurization pass,
-               bucketed cross-query scorer batches).
+  local    — sequential per-query cascade (per-query scorer dispatch, query
+             re-encoded once per candidate) — the legacy
+             ``MultiStageRanker.run`` schedule;
+  batched  — ``BatchedMultiStageRanker``'s coalesced schedule over a
+             32-query batch (one coalesced BM25 scoring call, one
+             featurization pass, bucketed cross-query scorer batches).
 
 Both paths warm on queries DISJOINT from the measured set, so the batched
 row measures batching (shared corpus sentences do hit its featurization
 cache — that reuse is inherent to cross-query execution — but none of the
-measured queries or pairs are pre-cached). The batched rows carry the
-measured speedup vs. their sequential twin; the engines are first checked
-to produce identical rankings."""
+measured queries or pairs are pre-cached). Each condition gets a fresh
+plan context for the same reason: plans built from one context share its
+featurization cache. The batched rows carry the measured speedup vs. their
+local twin; ``verify_plans`` first checks identical rankings."""
 from __future__ import annotations
 
 import time
@@ -24,8 +27,8 @@ import numpy as np
 
 from benchmarks.common import build_world, percentile_stats
 from repro.core import backends as BK
-from repro.core import pipeline as PL
-from repro.core.batch_pipeline import BatchedMultiStageRanker, verify_equivalence
+from repro.core import ops
+from repro.core.plan import PlanContext, plan, verify_plans
 
 BATCH = 32
 
@@ -46,21 +49,26 @@ def run(n_queries: int = 60, world=None) -> List[Dict]:
                 scorer(np.zeros((b, cfg.max_len), np.int32),  # neither path
                        np.zeros((b, cfg.max_len), np.int32),  # pays jit in
                        np.zeros((b, 4), np.float32))          # the timed loop
-            stages = [PL.RetrievalStage(index, corpus.documents, tok, h=10)]
+            pipeline = ops.Retrieve(h=10)
             if cutoff:
-                stages.append(PL.CutoffStage(margin=2.0))
-            stages.append(PL.RerankStage(scorer, tok, corpus.idf,
-                                         cfg.max_len, k=5))
-            ranker = PL.MultiStageRanker(stages)
-            verify_equivalence(ranker, BatchedMultiStageRanker(stages),
-                               measured[:8])
+                pipeline = pipeline >> ops.DynamicCutoff(margin=2.0)
+            pipeline = pipeline >> ops.Rerank(scorer, k=5)
+            # verification and measurement get separate contexts: plans
+            # from one context share its featurization cache, and the
+            # measured batched plan's cache must not see measured pairs
+            vctx = PlanContext.from_world(cfg, params, corpus, tok, index)
+            verify_plans([plan(pipeline, "local", vctx),
+                          plan(pipeline, "batched", vctx)], measured[:8])
+            ctx = PlanContext.from_world(cfg, params, corpus, tok, index)
+            local = plan(pipeline, "local", ctx)
+            batched = plan(pipeline, "batched", ctx)
 
-            ranker.run(warm[0])  # warm compiled entries
+            local.run(warm[0])  # warm compiled entries
             lats = []
             t0 = time.perf_counter()
             for q in measured:
                 t1 = time.perf_counter()
-                ranker.run(q)
+                local.run(q)
                 lats.append(time.perf_counter() - t1)
             seq_dt = time.perf_counter() - t0
             p50, p99 = percentile_stats(lats)
@@ -71,10 +79,9 @@ def run(n_queries: int = 60, world=None) -> List[Dict]:
                                      f"p50_ms={p50 * 1e3:.2f} "
                                      f"p99_ms={p99 * 1e3:.2f}")})
 
-            batched = BatchedMultiStageRanker(stages)
-            batched.run_batch(warm)  # disjoint warm-up batch
+            batched.run_many(warm)  # disjoint warm-up batch
             t0 = time.perf_counter()
-            batched.run_batch(measured)
+            batched.run_many(measured)
             bat_dt = time.perf_counter() - t0
             rows.append({"name": tag + f"+batched{BATCH}",
                          "us_per_call": 1e6 * bat_dt / len(measured),

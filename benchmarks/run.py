@@ -15,20 +15,22 @@ import json
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table", default="all",
-                    choices=["all", "1", "2", "e2e", "loadgen", "roofline"])
+                    choices=["all", "1", "2", "e2e", "pipeline_plans",
+                             "loadgen", "roofline"])
     ap.add_argument("--naive", action="store_true",
                     help="include the naive per-filter conv condition")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows as a JSON list")
     args = ap.parse_args()
 
-    from benchmarks import (e2e_pipeline, loadgen, roofline_table,
-                            table1_feedforward, table2_service)
+    from benchmarks import (e2e_pipeline, loadgen, pipeline_plans,
+                            roofline_table, table1_feedforward,
+                            table2_service)
     from benchmarks.common import build_world
 
     rows = []
     world = None
-    if args.table in ("all", "1", "2", "e2e", "loadgen"):
+    if args.table in ("all", "1", "2", "e2e", "pipeline_plans", "loadgen"):
         world = build_world()
     if args.table in ("all", "1"):
         rows += table1_feedforward.run(batch=1, world=world, naive=args.naive)
@@ -38,6 +40,8 @@ def main() -> None:
         rows += table2_service.run(world=world)
     if args.table in ("all", "e2e"):
         rows += e2e_pipeline.run(world=world)
+    if args.table in ("all", "pipeline_plans"):
+        rows += pipeline_plans.run(world=world)
     if args.table in ("all", "loadgen"):
         rows += loadgen.run(world=world)
     if args.table in ("all", "roofline"):

@@ -1,5 +1,7 @@
 """Quickstart: train the paper's CNN reranker on synthetic TrecQA-style data,
-then score the same pairs through every integration backend.
+score the same pairs through every integration backend, then compose a
+multi-stage ranking pipeline with the declarative algebra and run it under
+two execution plans.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,6 +12,9 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import backends as BK
+from repro.core import bm25 as BM
+from repro.core import ops
+from repro.core.plan import PlanContext, plan, verify_plans
 from repro.data import qa as QA
 from repro.data.tokenizer import HashingTokenizer
 from repro.models import sm_cnn
@@ -42,6 +47,22 @@ def main():
         s = scorer(dev["q_tok"], dev["a_tok"], dev["feats"])
         acc = float(np.mean((s > 0.5) == (dev["label"] > 0.5)))
         print(f"  {backend:9s} score[0]={s[0]:.6f}  acc={acc:.2f}")
+
+    print("\n== one pipeline, many execution plans ==")
+    # The pipeline is a pure description; plan() picks the execution
+    # strategy. See examples/compose_pipelines.py for the full tour.
+    index = BM.build_index([tok.encode(" ".join(d))
+                            for d in corpus.documents], cfg.vocab_size)
+    ctx = PlanContext.from_world(cfg, trainer.params, corpus, tok, index)
+    pipeline = ops.Retrieve(h=10) >> ops.Rerank("jit") % 3
+    print(f"  pipeline: {pipeline!r}")
+    plans = [plan(pipeline, t, ctx) for t in ("local", "batched")]
+    for p in plans:
+        print(f"  {p.describe()}")
+    verify_plans(plans, corpus.questions[:8])
+    final, _ = plans[1].run(corpus.questions[0])
+    print(f"  plans agree; Q: {corpus.questions[0]}")
+    print(f"               A: {final[0].text}  (score {final[0].score:.3f})")
 
 
 if __name__ == "__main__":

@@ -20,19 +20,22 @@ Server modes (also available via ``python -m repro.launch.serve``):
 
 Clients may attach a per-request deadline (``Client.get_score(q, a,
 deadline_s=...)``, wire protocol v2); v1 clients without deadlines keep
-working. For throughput-vs-tail-latency curves under open-loop Poisson
-load, use ``python -m benchmarks.run --table loadgen --json out.json``.
+working, and clients can opt into a bounded shed-retry budget
+(``Client(addr, retry_sheds=N)``). For throughput-vs-tail-latency curves
+under open-loop Poisson load, use ``python -m benchmarks.run --table
+loadgen --json out.json``.
 
-The pipeline section runs the same stage cascade two ways:
+The pipeline section declares ONE ranking pipeline with the operator
+algebra (repro.core.ops) and lowers it to three execution plans
+(repro.core.plan):
 
-  sequential — ``MultiStageRanker.run(query)`` per query: every query pays
-      its own BM25 dispatch and scorer call, and the rerank stage re-encodes
-      the query once per candidate;
-  batched    — ``BatchedMultiStageRanker.run_batch(queries)``: one coalesced
-      BM25 scoring call for the whole batch, one LRU-cached featurization
-      pass (each query/sentence encoded once), and bucketed cross-query
-      scorer batches — identical rankings, reported with the measured
-      speedup.
+  local    — sequential per-query cascade: every query pays its own BM25
+             dispatch and scorer call;
+  batched  — cross-query coalesced execution: one BM25 scoring call for the
+             whole batch, one LRU-cached featurization pass, bucketed
+             scorer batches — identical rankings, reported with speedup;
+  remote   — the SAME pipeline with its rerank stage dispatching pairs
+             through the RPC server stood up above.
 """
 import argparse
 import time
@@ -41,9 +44,9 @@ import numpy as np
 
 from repro.launch.world import build_world, percentile_stats
 from repro.core import backends as BK
-from repro.core import pipeline as PL
+from repro.core import ops
 from repro.core import service as SV
-from repro.core.batch_pipeline import BatchedMultiStageRanker
+from repro.core.plan import PlanContext, plan, verify_plans
 
 
 def main():
@@ -59,14 +62,15 @@ def main():
 
     print("== building world (corpus, index, trained reranker) ==")
     cfg, params, corpus, tok, index, pairs = build_world(train_steps=80)
+    ctx = PlanContext.from_world(cfg, params, corpus, tok, index,
+                                 buckets=(1, 8, 64, 256))
 
     print(f"== serving through RPC ({args.backend} backend, "
           f"{args.server} server) ==")
-    scorer = BK.make_scorer(args.backend, params, cfg, buckets=(1, 8, 64, 256))
     pool = None
     if args.server == "simple":
-        handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
-                                              cfg.max_len)
+        handler = SV.QuestionAnsweringHandler(ctx.scorer_for(args.backend),
+                                              tok, corpus.idf, cfg.max_len)
         srv = SV.SimpleServer(handler).start_background()
     else:
         from repro.serving.admission import AdmissionController
@@ -102,22 +106,20 @@ def main():
     bdt = time.perf_counter() - t0
     print(f"  batched(64)          QPS={64/bdt:8.1f}")
     client.close()
-    srv.stop()
-    if pool is not None:
-        print("  cluster stats: " + " ".join(
-            f"{k}={v:.1f}" for k, v in sorted(pool.stats().items())
-            if k.endswith("_requests") or k == "outstanding_rows"))
-        pool.stop()
 
-    print("\n== multi-stage pipeline answers ==")
-    stages_list = [
-        PL.RetrievalStage(index, corpus.documents, tok, h=10),
-        PL.CutoffStage(margin=3.0),
-        PL.RerankStage(scorer, tok, corpus.idf, cfg.max_len, k=3),
-    ]
-    ranker = PL.MultiStageRanker(stages_list)
+    print("\n== one pipeline, three execution plans ==")
+    pipeline = (ops.Retrieve(h=10) >> ops.DynamicCutoff(margin=3.0)
+                >> ops.Rerank(args.backend) % 3)
+    print(f"  pipeline: {pipeline!r}")
+    plans = {t: plan(pipeline, t, ctx) for t in ("local", "batched")}
+    # remote: the same pipeline, rerank dispatched through the live server
+    plans["remote"] = plan(pipeline, "remote", ctx=ctx, remote=srv.address)
+    for p in plans.values():
+        print(f"  {p.describe()}")
+
+    print("\n== multi-stage pipeline answers (remote plan) ==")
     for q in corpus.questions[:3]:
-        final, trace = ranker.run(q)
+        final, trace = plans["remote"].run(q)
         stages = " -> ".join(f"{t.name}({len(t.candidates)}, "
                              f"{t.latency_s*1e3:.1f}ms)" for t in trace)
         print(f"  Q: {q}")
@@ -125,25 +127,46 @@ def main():
         if final:
             print(f"     A: {final[0].text}  (score {final[0].score:.3f})")
 
-    print("\n== batched vs sequential pipeline (32-query batch) ==")
+    # Release the answer section's connection first: the SimpleServer
+    # serves one connection at a time, so a second live client would
+    # queue behind it forever.
+    plans["remote"].close()
+
+    print("\n== plan throughput (32-query batch, identical rankings) ==")
     queries = corpus.questions[:32]
-    warm = corpus.questions[32:]    # disjoint warm-up set: the measured
-    batched = BatchedMultiStageRanker(stages_list)   # queries/pairs stay cold
-    ranker.run(warm[0])
-    batched.run_batch(warm)
-    t0 = time.perf_counter()
-    for q in queries:
-        ranker.run(q)
-    seq_dt = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    results = batched.run_batch(queries)
-    bat_dt = time.perf_counter() - t0
-    assert len(results) == len(queries)
-    cache = batched.cache_stats()
-    print(f"  sequential  {len(queries)/seq_dt:8.1f} q/s")
-    print(f"  batched     {len(queries)/bat_dt:8.1f} q/s  "
-          f"(speedup {seq_dt/bat_dt:.2f}x, feat-cache hit rate "
-          f"{cache['feat_cache_hit_rate']:.0%})")
+    warm = corpus.questions[32:]    # disjoint warm-up set
+    # Fresh context per plan: with a shared featurization cache the first
+    # timed plan would warm the measured queries for the later ones.
+    # Verification runs AFTER the timed loop for the same reason.
+    tplans = {t: plan(pipeline, t,
+                      PlanContext.from_world(cfg, params, corpus, tok, index,
+                                             buckets=(1, 8, 64, 256),
+                                             remote=srv.address))
+              for t in ("local", "batched", "remote")}
+    timings = {}
+    for name, p in tplans.items():
+        p.run_many(warm)            # measured queries stay cold
+        t0 = time.perf_counter()
+        results = p.run_many(queries)
+        timings[name] = time.perf_counter() - t0
+        assert len(results) == len(queries)
+    verify_plans(list(tplans.values()), queries[:8])
+    cache = tplans["batched"].cache_stats()
+    for name, dt in timings.items():
+        extra = ""
+        if name != "local":
+            extra = f"  (speedup {timings['local'] / dt:.2f}x vs local)"
+        print(f"  {name:8s} {len(queries)/dt:8.1f} q/s{extra}")
+    print(f"  feat-cache hit rate {cache['feat_cache_hit_rate']:.0%}")
+
+    for p in tplans.values():
+        p.close()
+    srv.stop()
+    if pool is not None:
+        print("  cluster stats: " + " ".join(
+            f"{k}={v:.1f}" for k, v in sorted(pool.stats().items())
+            if k.endswith("_requests") or k == "outstanding_rows"))
+        pool.stop()
 
 
 if __name__ == "__main__":

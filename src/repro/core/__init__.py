@@ -1,6 +1,16 @@
-"""The paper's contribution: multi-stage ranking + serving-integration axes."""
+"""The paper's contribution: multi-stage ranking + serving-integration axes.
+
+Preferred API: describe pipelines with the ops algebra, execute via plan —
+    from repro.core import ops, plan
+    p = ops.Retrieve(h=20) >> ops.Rerank("jit") % 10
+    plan.plan(p, "batched", ctx).run_many(queries)
+"""
+from repro.core import ops, plan  # noqa: F401
 from repro.core.backends import BACKENDS, Scorer, make_scorer  # noqa: F401
 from repro.core.batch_pipeline import (BatchedMultiStageRanker,  # noqa: F401
                                        verify_equivalence)
 from repro.core.pipeline import (Candidate, CutoffStage, MultiStageRanker,  # noqa: F401
-                                 RerankStage, RetrievalStage, Stage)
+                                 RerankStage, RetrievalStage, Stage,
+                                 TopKStage)
+from repro.core.plan import (ExecutionPlan, PlanContext,  # noqa: F401
+                             verify_plans)

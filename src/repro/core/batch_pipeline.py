@@ -41,14 +41,31 @@ class BatchedMultiStageRanker:
     stages (retrieval, cutoff) are inherently per-query and run as-is;
     every ``RerankStage`` is executed once for the whole batch through a
     shared featurization cache and bucketed scorer calls.
+
+    ``shared_cache`` is the planner's plan-level optimization
+    (``repro.core.plan``): one ``FeaturizationCache`` serves every rerank
+    stage in the plan (and every plan built from the same context), instead
+    of one private cache per stage — a query or sentence featurized by any
+    stage is a hit for all of them. Stages built with a matching tokenizer/
+    idf/max_len use it; others keep a private cache.
+
+    .. deprecated:: prefer ``repro.core.ops`` + ``repro.core.plan`` — the
+       planner's ``batched`` target lowers onto this exact engine.
     """
 
-    def __init__(self, stages: Sequence[Stage], cache_capacity: int = 8192):
+    def __init__(self, stages: Sequence[Stage], cache_capacity: int = 8192,
+                 shared_cache: Optional[FeaturizationCache] = None):
         self.stages = list(stages)
         self._caches: Dict[int, FeaturizationCache] = {}
         self._cache_capacity = cache_capacity
+        self._shared_cache = shared_cache
 
     def _cache_for(self, stage: RerankStage) -> FeaturizationCache:
+        shared = self._shared_cache
+        if (shared is not None and stage.tok is shared.tok
+                and stage.idf is shared.idf
+                and stage.max_len == shared.max_len):
+            return shared
         cache = self._caches.get(id(stage))
         if cache is None:
             cache = FeaturizationCache(stage.tok, stage.idf, stage.max_len,
@@ -125,7 +142,10 @@ class BatchedMultiStageRanker:
 
     def cache_stats(self) -> Dict[str, float]:
         out: Dict[str, float] = {}
-        for cache in self._caches.values():
+        caches = list(self._caches.values())
+        if self._shared_cache is not None:
+            caches.append(self._shared_cache)
+        for cache in caches:
             for k, v in cache.stats().items():
                 out[k] = out.get(k, 0.0) + v
         n = max(out.get("feat_cache_hits", 0.0)

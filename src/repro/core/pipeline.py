@@ -6,6 +6,13 @@ segmented into sentences; sentences are rescored by the neural reranker.
 Generalized here to an N-stage cascade with per-stage budgets (Wang et al.
 2011 cascade ranking; Asadi & Lin 2013 candidate generation trade-offs),
 per-stage latency accounting, and pluggable scorer backends.
+
+This module is the *execution layer*: concrete ``Stage`` implementations
+plus the sequential cascade runner. New code should describe pipelines with
+the declarative algebra in ``repro.core.ops`` and lower them with
+``repro.core.plan.plan(pipeline, target, ctx)`` — the planner reuses these
+stage impls for its ``local`` plan. ``MultiStageRanker`` is kept as the
+(deprecated) direct entry point so existing callers keep working.
 """
 from __future__ import annotations
 
@@ -106,6 +113,24 @@ class RerankStage(Stage):
         return ranked[: self.k]
 
 
+class TopKStage(Stage):
+    """Rank cutoff (``ops.Cutoff``): stable sort by score desc, keep top-k.
+
+    Distinct from ``CutoffStage`` (dynamic, score-gap based): this is the
+    fixed-depth truncation of cascade ranking budgets. Stable sort keeps
+    the upstream order on exact score ties, so results are deterministic
+    across execution plans."""
+
+    def __init__(self, k: int):
+        self.name = f"top{k}"
+        self.k = int(k)
+
+    def run(self, query, candidates) -> List[Candidate]:
+        if not candidates:
+            return []
+        return sorted(candidates, key=lambda c: -c.score)[: self.k]
+
+
 class CutoffStage(Stage):
     """Dynamic cutoff [Culpepper et al. 2016]: early-exit when stage-1 scores
     are already confidently separated — saves reranker invocations."""
@@ -130,7 +155,12 @@ class CutoffStage(Stage):
 
 
 class MultiStageRanker:
-    """Compose stages; track per-stage latency for the paper's tables."""
+    """Compose stages; track per-stage latency for the paper's tables.
+
+    .. deprecated:: prefer ``repro.core.ops`` + ``repro.core.plan`` — the
+       planner's ``local`` target lowers onto this exact runner, and the
+       same pipeline description also lowers to batched and remote plans.
+    """
 
     def __init__(self, stages: Sequence[Stage]):
         self.stages = list(stages)

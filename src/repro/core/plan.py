@@ -1,0 +1,541 @@
+"""Planner: lower one declarative ``ops.Pipeline`` to an execution plan.
+
+The algebra (``repro.core.ops``) describes *what* a ranking pipeline
+computes; this module decides *how*. One pipeline lowers to any of three
+targets:
+
+  local    sequential per-query cascade — reuses ``MultiStageRanker`` and
+           the existing ``Stage`` impls unchanged (the paper's in-process
+           feedforward integration).
+  batched  cross-query coalesced execution — reuses
+           ``BatchedMultiStageRanker``'s one-featurization-pass /
+           bucketed-scorer path for ``run_many`` (one BM25 dispatch and one
+           scorer stream per query batch).
+  remote   rerank stages dispatch their (query, sentence) pairs through an
+           RPC boundary — a ``core.service.Client`` (with a shed-retry
+           budget), or any in-process handler with ``get_scores`` (e.g. a
+           ``serving.cluster.ReplicaPool``). Retrieval and cutoffs stay
+           local; ``run_many`` coalesces all queries' pairs into chunked
+           batch RPCs.
+
+Plan-level optimizations applied at lowering time:
+
+  * ``ops.normalize``: adjacent Cutoff merging, folding a Cutoff into the
+    preceding Rerank/Fuse ``k`` (see ops.py);
+  * k / h pushdown into the scorer's bucket choice: the planner tracks an
+    upper bound on the candidate count flowing into each rerank (retrieve
+    ``h`` x max sentences per doc, clipped by upstream cutoffs) and builds
+    the backend scorer with a bucket ladder capped there — so jit/aot
+    entries are compiled for (and padded to) no more rows than the plan can
+    ever produce. The batched target scales the cap by ``ctx.batch_hint``
+    since its scorer calls span the query batch.
+  * one shared ``FeaturizationCache`` per plan context, used by every
+    coalesced rerank and fusion stage in the plan (and shared across plans
+    built from the same context — so equivalence checks compare scorers,
+    not featurization rounding).
+
+All three plans produce identical rankings (``verify_plans`` asserts it,
+tolerating order swaps only between float-level score ties).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ops
+from repro.core import pipeline as PL
+from repro.core.batch_pipeline import BatchedMultiStageRanker
+from repro.data.featurize import FeaturizationCache
+
+TARGETS = ("local", "batched", "remote")
+
+#: Bucket ladder bounds: entries grow 1 -> 8 -> 64 -> x4 up to this cap.
+MAX_BUCKET = 4096
+
+
+class PlanError(ValueError):
+    """A pipeline cannot be lowered to the requested target/context."""
+
+
+def bucket_ladder(cap: Optional[int]) -> Tuple[int, ...]:
+    """Ascending scorer buckets whose top entry covers ``cap`` rows (so a
+    full-size stage call pads instead of chunking), trimmed so no bucket
+    below the top is already >= cap. ``None`` -> the default ladder."""
+    if cap is None:
+        return (1, 8, 64, 256)
+    cap = max(int(cap), 1)
+    ladder = [1, 8, 64]
+    while ladder[-1] < min(cap, MAX_BUCKET):
+        ladder.append(ladder[-1] * 4)
+    while len(ladder) > 1 and ladder[-2] >= cap:
+        ladder.pop()
+    return tuple(ladder)
+
+
+class _HandlerTransport:
+    """Adapt any ``get_scores(pairs)`` handler (QuestionAnsweringHandler,
+    ReplicaPool, ServingEngine) to the client's ``get_score_batch``."""
+
+    def __init__(self, handler):
+        self._handler = handler
+
+    def get_score_batch(self, pairs):
+        return self._handler.get_scores(pairs)
+
+
+@dataclasses.dataclass
+class PlanContext:
+    """Everything a description needs to become executable: the corpus-side
+    bindings (tokenizer, idf, documents, indexes), the model-side bindings
+    (cfg + params for building backend scorers by name), the shared
+    featurization cache, and the remote endpoints for the remote target.
+
+    ``remote`` may be a ``(host, port)`` address (a ``service.Client`` with
+    a shed-retry budget is created lazily), an object with
+    ``get_score_batch`` or ``get_scores``, or a dict mapping scorer specs to
+    any of those (key "default" is the fallback) so fused remote stages can
+    hit different endpoints per backend.
+    """
+
+    tokenizer: Any
+    idf: Dict[str, float]
+    max_len: int
+    index: Any = None
+    documents: Sequence[Sequence[str]] = ()
+    indexes: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    cfg: Any = None
+    params: Any = None
+    cache: Optional[FeaturizationCache] = None
+    cache_capacity: int = 8192
+    batch_hint: int = 32
+    buckets: Optional[Tuple[int, ...]] = None
+    remote: Any = None
+    remote_retries: int = 2
+    remote_backoff_s: float = 0.005
+    #: Max pairs per remote scoring RPC. Coalesced run_many calls are
+    #: chunked at this size so one query batch never exceeds a server's
+    #: admission bound (default max_queue_rows=512 in launch.serve) — an
+    #: over-bound batch would be a permanent too_large rejection, while
+    #: chunks at worst shed retriably under load (and the plan's Client
+    #: carries a shed-retry budget).
+    remote_chunk: int = 256
+
+    def __post_init__(self):
+        if self.cache is None:
+            self.cache = FeaturizationCache(self.tokenizer, self.idf,
+                                            self.max_len,
+                                            self.cache_capacity)
+        self._scorers: Dict[Tuple, Any] = {}
+        self._transports: Dict[Any, Any] = {}
+        self._owned_clients: List[Any] = []
+
+    @classmethod
+    def from_world(cls, cfg, params, corpus, tokenizer, index,
+                   **kw) -> "PlanContext":
+        """Bind the canonical demo world (``launch.world.build_world``)."""
+        return cls(tokenizer=tokenizer, idf=corpus.idf, max_len=cfg.max_len,
+                   index=index, documents=corpus.documents, cfg=cfg,
+                   params=params, **kw)
+
+    def resolve_index(self, spec):
+        if not isinstance(spec, str):
+            return spec
+        if spec in self.indexes:
+            return self.indexes[spec]
+        if spec == "default" and self.index is not None:
+            return self.index
+        raise PlanError(f"no index bound for {spec!r} "
+                        f"(known: {sorted(self.indexes) + ['default']})")
+
+    def scorer_for(self, spec, cap: Optional[int] = None):
+        """A ``backends.Scorer`` for ``spec``: prebuilt scorers pass
+        through; backend names are built (and memoized) with a bucket
+        ladder capped at the plan's candidate bound."""
+        if not isinstance(spec, str):
+            return spec
+        buckets = self.buckets or bucket_ladder(cap)
+        key = (spec, buckets)
+        if key not in self._scorers:
+            if self.params is None or self.cfg is None:
+                raise PlanError(f"building scorer {spec!r} needs cfg+params "
+                                f"bound in the PlanContext")
+            from repro.core import backends as BK
+            self._scorers[key] = BK.make_scorer(spec, self.params, self.cfg,
+                                                buckets=buckets)
+        return self._scorers[key]
+
+    def transport_for(self, spec):
+        """The remote scoring endpoint for a rerank spec (see class doc)."""
+        remote = self.remote
+        if isinstance(remote, dict):
+            key = spec if isinstance(spec, str) else "default"
+            remote = remote.get(key, remote.get("default"))
+        if remote is None:
+            raise PlanError(f"remote target needs ctx.remote bound "
+                            f"(no endpoint for {spec!r})")
+        # One transport per resolved endpoint: tuple addresses key by
+        # value (two specs pointing at the same server share one
+        # connection), handler objects by identity.
+        cache_key = (("addr", remote) if isinstance(remote, tuple)
+                     else ("obj", id(remote)))
+        if cache_key not in self._transports:
+            if isinstance(remote, tuple):
+                from repro.core.service import Client
+                client = Client(remote, retry_sheds=self.remote_retries,
+                                backoff_s=self.remote_backoff_s)
+                self._owned_clients.append(client)
+                self._transports[cache_key] = client
+            elif hasattr(remote, "get_score_batch"):
+                self._transports[cache_key] = remote
+            elif hasattr(remote, "get_scores"):
+                self._transports[cache_key] = _HandlerTransport(remote)
+            else:
+                raise PlanError(f"unusable remote endpoint {remote!r}")
+        return self._transports[cache_key]
+
+    def close(self) -> None:
+        """Close the ``service.Client`` connections this context opened
+        (endpoints passed in as live objects are the caller's to manage)."""
+        for client in self._owned_clients:
+            try:
+                client.close()
+            except OSError:
+                pass
+        self._owned_clients.clear()
+        self._transports.clear()
+
+
+def _chunked_remote_scores(transport, pairs: List[Tuple[str, str]],
+                           max_rpc_pairs: int) -> np.ndarray:
+    """Score pairs over a transport in RPC-sized chunks (see
+    ``PlanContext.remote_chunk``)."""
+    out: List[float] = []
+    for i in range(0, len(pairs), max_rpc_pairs):
+        out.extend(transport.get_score_batch(pairs[i:i + max_rpc_pairs]))
+    return np.asarray(out, np.float64)
+
+
+def _rank_by_scores(candidates, scores,
+                    k: Optional[int]) -> List[PL.Candidate]:
+    """Rebuild candidates with new scores, sorted desc, truncated to k."""
+    ranked = sorted((PL.Candidate(c.doc_id, c.sent_id, c.text, float(s))
+                     for c, s in zip(candidates, scores)),
+                    key=lambda c: -c.score)
+    return ranked[: k]
+
+
+class RemoteRerankStage(PL.Stage):
+    """Rerank through an RPC boundary: ship (query, sentence) pairs to the
+    transport, rank by the returned scores. ``run_batch`` coalesces every
+    query's pairs into chunked batch calls — the remote analogue of the
+    batched engine's coalesced scorer stream."""
+
+    def __init__(self, transport, k: Optional[int] = None,
+                 name: str = "rerank-remote", max_rpc_pairs: int = 256):
+        self.name = name
+        self.transport = transport
+        self.k = k
+        self.max_rpc_pairs = max_rpc_pairs
+
+    def _score(self, pairs: List[Tuple[str, str]]) -> np.ndarray:
+        return _chunked_remote_scores(self.transport, pairs,
+                                      self.max_rpc_pairs)
+
+    def run(self, query, candidates):
+        if not candidates:
+            return []
+        return _rank_by_scores(
+            candidates, self._score([(query, c.text) for c in candidates]),
+            self.k)
+
+    def run_batch(self, queries, states):
+        active = [i for i, c in enumerate(states or []) if c]
+        pairs: List[Tuple[str, str]] = []
+        for i in active:
+            pairs.extend((queries[i], c.text) for c in states[i])
+        scores = self._score(pairs) if pairs else np.zeros((0,))
+        outs: List[List[PL.Candidate]] = [[] for _ in queries]
+        offset = 0
+        for i in active:
+            n = len(states[i])
+            outs[i] = _rank_by_scores(states[i], scores[offset:offset + n],
+                                      self.k)
+            offset += n
+        return outs
+
+
+class _LocalChild:
+    """Fusion child scoring through an in-process backend Scorer."""
+
+    needs_arrays = True
+
+    def __init__(self, scorer):
+        self.scorer = scorer
+        self.name = scorer.name
+
+    def score(self, pairs, q_tok, a_tok, feats) -> np.ndarray:
+        return np.asarray(self.scorer(q_tok, a_tok, feats))
+
+
+class _RemoteChild:
+    """Fusion child scoring through a remote transport."""
+
+    needs_arrays = False
+
+    def __init__(self, transport, name: str, max_rpc_pairs: int = 256):
+        self.transport = transport
+        self.name = name
+        self.max_rpc_pairs = max_rpc_pairs
+
+    def score(self, pairs, q_tok, a_tok, feats) -> np.ndarray:
+        return _chunked_remote_scores(self.transport, pairs,
+                                      self.max_rpc_pairs)
+
+
+class FuseStage(PL.Stage):
+    """Linear score interpolation (``ops.Fuse``): every child scores the
+    same candidates; output score is ``sum(w_i * s_i)``, ranked desc, cut to
+    ``k``. Featurization happens once per stage call through the plan's
+    shared cache regardless of how many local children there are;
+    ``run_batch`` coalesces across the query batch."""
+
+    def __init__(self, children, weights: Sequence[float],
+                 cache: FeaturizationCache, k: Optional[int] = None,
+                 name: Optional[str] = None):
+        self.children = list(children)
+        self.weights = [float(w) for w in weights]
+        self.cache = cache
+        self.k = k
+        self.name = name or ("fuse(" + "+".join(c.name for c in children)
+                             + ")" + (f"-k{k}" if k is not None else ""))
+
+    def _fused(self, pairs: List[Tuple[str, str]],
+               q_rows: List[np.ndarray], a_rows: List[np.ndarray]
+               ) -> np.ndarray:
+        if any(c.needs_arrays for c in self.children):
+            q_tok, a_tok = np.stack(q_rows), np.stack(a_rows)
+            feats = self.cache.pair_feats_many(pairs)
+        else:
+            q_tok = a_tok = feats = None
+        total = np.zeros((len(pairs),), np.float64)
+        for child, w in zip(self.children, self.weights):
+            total += w * np.asarray(
+                child.score(pairs, q_tok, a_tok, feats), np.float64)
+        return total
+
+    def run(self, query, candidates):
+        if not candidates:
+            return []
+        q_row = self.cache.query_row(query)
+        pairs = [(query, c.text) for c in candidates]
+        fused = self._fused(pairs, [q_row] * len(candidates),
+                            [self.cache.answer_row(c.text)
+                             for c in candidates])
+        return _rank_by_scores(candidates, fused, self.k)
+
+    def run_batch(self, queries, states):
+        active = [i for i, c in enumerate(states or []) if c]
+        pairs, q_rows, a_rows = [], [], []
+        for i in active:
+            q_row = self.cache.query_row(queries[i])
+            for c in states[i]:
+                pairs.append((queries[i], c.text))
+                q_rows.append(q_row)
+                a_rows.append(self.cache.answer_row(c.text))
+        fused = (self._fused(pairs, q_rows, a_rows) if pairs
+                 else np.zeros((0,)))
+        outs: List[List[PL.Candidate]] = [[] for _ in queries]
+        offset = 0
+        for i in active:
+            n = len(states[i])
+            outs[i] = _rank_by_scores(states[i], fused[offset:offset + n],
+                                      self.k)
+            offset += n
+        return outs
+
+
+def _min_bound(bound: Optional[int], k: Optional[int]) -> Optional[int]:
+    if k is None:
+        return bound
+    return k if bound is None else min(bound, k)
+
+
+def _scorer_cap(bound: Optional[int], target: str,
+                ctx: PlanContext) -> Optional[int]:
+    """k-pushdown: the scorer never sees more rows than the plan's candidate
+    bound — scaled by the batch hint for the batched target, whose scorer
+    calls span the whole query batch."""
+    if bound is None:
+        return None
+    if target == "batched":
+        return min(bound * max(ctx.batch_hint, 1), MAX_BUCKET)
+    return bound
+
+
+def _rerank_name(spec, k: Optional[int], remote: bool) -> str:
+    tag = spec if isinstance(spec, str) else getattr(spec, "name", "scorer")
+    name = f"rerank-{tag}" + ("@remote" if remote else "")
+    return name + (f"-k{k}" if k is not None else "")
+
+
+def lower(pipeline: ops.Op, target: str, ctx: PlanContext) -> List[PL.Stage]:
+    """Normalize + lower a pipeline description to a Stage cascade."""
+    if target not in TARGETS:
+        raise PlanError(f"unknown target {target!r}; one of {TARGETS}")
+    steps = ops.normalize(pipeline).steps
+    if not steps:
+        raise PlanError("empty pipeline")
+    if not isinstance(steps[0], ops.Retrieve):
+        raise PlanError(f"pipeline must start with Retrieve, "
+                        f"got {type(steps[0]).__name__}")
+    stages: List[PL.Stage] = []
+    bound: Optional[int] = None
+    for op in steps:
+        if isinstance(op, ops.Retrieve):
+            if stages:
+                raise PlanError("Retrieve must be the first op")
+            index = ctx.resolve_index(op.index)
+            stages.append(PL.RetrievalStage(index, ctx.documents,
+                                            ctx.tokenizer, h=op.h))
+            max_sents = max((len(d) for d in ctx.documents), default=0)
+            bound = op.h * max_sents if max_sents else None
+        elif isinstance(op, ops.Cutoff):
+            stages.append(PL.TopKStage(op.k))
+            bound = _min_bound(bound, op.k)
+        elif isinstance(op, ops.DynamicCutoff):
+            stages.append(PL.CutoffStage(op.margin, op.min_keep))
+        elif isinstance(op, ops.Rerank):
+            cap = _scorer_cap(bound, target, ctx)
+            if target == "remote":
+                stages.append(RemoteRerankStage(
+                    ctx.transport_for(op.scorer), k=op.k,
+                    name=_rerank_name(op.scorer, op.k, remote=True),
+                    max_rpc_pairs=ctx.remote_chunk))
+            else:
+                scorer = ctx.scorer_for(op.scorer, cap)
+                stages.append(PL.RerankStage(
+                    scorer, ctx.tokenizer, ctx.idf, ctx.max_len, k=op.k,
+                    name=_rerank_name(op.scorer, op.k, remote=False)))
+            bound = _min_bound(bound, op.k)
+        elif isinstance(op, ops.Fuse):
+            cap = _scorer_cap(bound, target, ctx)
+            children = []
+            for child in op.children:
+                if not isinstance(child, ops.Rerank):
+                    raise PlanError("nested Fuse lowering is not supported "
+                                    "yet; flatten the fusion")
+                if target == "remote":
+                    children.append(_RemoteChild(
+                        ctx.transport_for(child.scorer),
+                        _rerank_name(child.scorer, None, remote=True),
+                        max_rpc_pairs=ctx.remote_chunk))
+                else:
+                    children.append(_LocalChild(
+                        ctx.scorer_for(child.scorer, cap)))
+            stages.append(FuseStage(children, op.weights, ctx.cache,
+                                    k=op.k))
+            bound = _min_bound(bound, op.k)
+        else:
+            raise PlanError(f"cannot lower op {op!r}")
+    return stages
+
+
+class ExecutionPlan:
+    """A lowered pipeline: ``run`` one query, ``run_many`` a batch.
+
+    local    run/run_many are sequential ``MultiStageRanker`` passes.
+    batched  both route through ``BatchedMultiStageRanker`` (run_many is
+             the coalesced cross-query schedule).
+    remote   run is a sequential pass whose rerank stages RPC per query;
+             run_many coalesces all queries' pairs per rerank stage.
+    Both engines return the same ``(candidates, trace)`` contract as the
+    legacy entry points.
+    """
+
+    def __init__(self, pipeline: ops.Op, target: str, stages: List[PL.Stage],
+                 ctx: PlanContext):
+        self.pipeline = pipeline
+        self.target = target
+        self.stages = stages
+        self.ctx = ctx
+        self._seq = PL.MultiStageRanker(stages)
+        self._bat = BatchedMultiStageRanker(stages, shared_cache=ctx.cache)
+
+    def run(self, query: str):
+        if self.target == "batched":
+            return self._bat.run(query)
+        return self._seq.run(query)
+
+    def run_many(self, queries: Sequence[str]):
+        if self.target == "local":
+            return [self._seq.run(q) for q in queries]
+        return self._bat.run_batch(queries)
+
+    def describe(self) -> str:
+        parts = []
+        for s in self.stages:
+            extra = ""
+            scorer = getattr(s, "scorer", None)
+            if scorer is not None and hasattr(scorer, "_buckets"):
+                extra = f"[buckets={scorer._buckets}]"
+            elif isinstance(s, RemoteRerankStage):
+                extra = "[rpc]"
+            parts.append(s.name + extra)
+        return f"{self.target}: " + " -> ".join(parts)
+
+    def __repr__(self) -> str:
+        return f"<ExecutionPlan {self.describe()}>"
+
+    def cache_stats(self) -> Dict[str, float]:
+        return self.ctx.cache.stats()
+
+    def close(self) -> None:
+        """Release the remote connections the plan's context opened. Plans
+        sharing one context share its transports — close once, at the end."""
+        self.ctx.close()
+
+
+def plan(pipeline: ops.Op, target: str = "local",
+         ctx: Optional[PlanContext] = None, **ctx_kw) -> ExecutionPlan:
+    """Lower ``pipeline`` to an ``ExecutionPlan`` for ``target``.
+
+    ``ctx`` carries the bindings; keyword args build one ad hoc (they are
+    ``PlanContext`` fields). The same pipeline value can be planned for
+    every target — the description never changes, only the lowering.
+    """
+    if ctx is None:
+        ctx = PlanContext(**ctx_kw)
+    elif ctx_kw:
+        ctx = dataclasses.replace(ctx, **ctx_kw)
+    return ExecutionPlan(pipeline, target, lower(pipeline, target, ctx), ctx)
+
+
+def _ranking_ids(cands) -> List[Tuple[int, int, str]]:
+    return [(c.doc_id, c.sent_id, c.text) for c in cands]
+
+
+def verify_plans(plans: Sequence[ExecutionPlan], queries: Sequence[str],
+                 tie_atol: float = 1e-5) -> None:
+    """Assert every plan produces the ranking of ``plans[0]`` on every
+    query: same candidate set, same order — order may differ only between
+    candidates whose scores are within ``tie_atol`` (different execution
+    schedules can flip float-level ties in the last ulp)."""
+    base = plans[0].run_many(queries)
+    for other in plans[1:]:
+        got = other.run_many(queries)
+        for q, (bc, _), (oc, _) in zip(queries, base, got):
+            b_ids, o_ids = _ranking_ids(bc), _ranking_ids(oc)
+            if b_ids == o_ids:
+                continue
+            assert sorted(b_ids) == sorted(o_ids), (
+                f"candidate set mismatch ({plans[0].target} vs "
+                f"{other.target}) for query {q!r}: {b_ids} != {o_ids}")
+            for rank, (bi, oi) in enumerate(zip(b_ids, o_ids)):
+                if bi != oi:
+                    gap = abs(bc[rank].score - oc[rank].score)
+                    assert gap <= tie_atol, (
+                        f"ranking mismatch ({plans[0].target} vs "
+                        f"{other.target}) for query {q!r} at rank {rank}: "
+                        f"{bi} != {oi} (score gap {gap:g})")

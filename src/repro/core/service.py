@@ -113,7 +113,15 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                 continue
         try:
             try:
-                scores = handler.get_scores(pairs)
+                # Handlers that opt in (supports_deadline, e.g. ReplicaPool)
+                # get the absolute deadline so their MicroBatcher can still
+                # drop the request at dequeue if it expires while queued —
+                # surfaced as a ShedError and answered with MSG_SHED below.
+                if getattr(handler, "supports_deadline", False):
+                    scores = handler.get_scores(pairs,
+                                                deadline_abs=deadline_abs)
+                else:
+                    scores = handler.get_scores(pairs)
                 reply = wire.encode_reply([float(s) for s in scores])
             finally:
                 if admission is not None:
@@ -122,6 +130,11 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
             conn.sendall(reply)
         except OSError:
             break
+        except wire.ShedError as e:
+            try:
+                conn.sendall(wire.encode_shed(str(e) or "shed"))
+            except OSError:
+                break
         except Exception as e:  # noqa: BLE001 — service boundary
             try:
                 conn.sendall(wire.encode_error(str(e)))
@@ -274,13 +287,26 @@ class Client:
     Usable as a context manager; on ``ConnectionError`` (server restart, a
     worker dropping the connection) one transparent reconnect + resend is
     attempted per call, so load-generator worker loops survive server churn.
-    ``ShedError`` replies are NOT retried here — shedding is the server
-    telling the caller to back off, and retrying would defeat it.
+
+    ``ShedError`` replies (MSG_SHED back-pressure) are not retried by
+    default — shedding is the server telling the caller to back off, and a
+    blind resend would defeat it. ``retry_sheds`` grants a bounded retry
+    budget per call with exponential backoff (``backoff_s`` doubling up to
+    ``backoff_max_s``): the caller backs off as instructed, and once the
+    budget is spent the ShedError still surfaces, so sustained overload
+    remains visible instead of turning into a silent retry storm. Sheds
+    retried across a client's life are counted in ``shed_retries``.
     """
 
-    def __init__(self, address: Tuple[str, int], reconnect: bool = True):
+    def __init__(self, address: Tuple[str, int], reconnect: bool = True,
+                 retry_sheds: int = 0, backoff_s: float = 0.01,
+                 backoff_max_s: float = 0.5):
         self.address = address
         self.reconnect = reconnect
+        self.retry_sheds = retry_sheds
+        self.backoff_s = backoff_s
+        self.backoff_max_s = backoff_max_s
+        self.shed_retries = 0
         self._sock = self._connect()
 
     def _connect(self) -> socket.socket:
@@ -314,14 +340,28 @@ class Client:
             self._sock = self._connect()
             return self._roundtrip(frame)
 
+    def _rpc_with_retry(self, frame: bytes):
+        attempt = 0
+        while True:
+            try:
+                return self._rpc(frame)
+            except wire.ShedError:
+                if attempt >= self.retry_sheds:
+                    raise  # budget spent: overload surfaces to the caller
+                time.sleep(min(self.backoff_s * (2 ** attempt),
+                               self.backoff_max_s))
+                attempt += 1
+                self.shed_retries += 1
+
     def get_score(self, question: str, answer: str,
                   deadline_s: Optional[float] = None) -> float:
-        return self._rpc(wire.encode_get_score(question, answer,
-                                               deadline_s))[0]
+        return self._rpc_with_retry(
+            wire.encode_get_score(question, answer, deadline_s))[0]
 
     def get_score_batch(self, pairs: Sequence[Tuple[str, str]],
                         deadline_s: Optional[float] = None):
-        return self._rpc(wire.encode_get_score_batch(pairs, deadline_s))
+        return self._rpc_with_retry(
+            wire.encode_get_score_batch(pairs, deadline_s))
 
     def close(self):
         self._sock.close()

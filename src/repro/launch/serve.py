@@ -8,8 +8,16 @@
   PYTHONPATH=src python -m repro.launch.serve --server threadpool \
       --replicas 4 --policy p2c --max-queue 256 --port 9090
 
+  # print how the canonical ranking pipeline lowers to each execution plan
+  PYTHONPATH=src python -m repro.launch.serve --describe
+
   (then drive it with repro.core.service.Client, benchmarks/loadgen.py,
   or examples/serve_pipeline.py)
+
+Single-server scorer construction routes through the declarative pipeline
+API's ``PlanContext`` (repro.core.plan), the same factory the planner and
+examples use; replica pools still build one independent scorer per replica
+(``ReplicaPool.build``) so replicas don't share compiled-function state.
 """
 from __future__ import annotations
 
@@ -17,27 +25,51 @@ import argparse
 
 from repro.launch.world import build_world
 from repro.core import backends as BK
+from repro.core import ops
 from repro.core import service as SV
+from repro.core.plan import PlanContext, plan
 from repro.serving.admission import AdmissionController
 from repro.serving.cluster import POLICIES, ReplicaPool
 
 
-def build_server(args, cfg, params, corpus, tok):
+def build_server(args, cfg, params, corpus, tok, ctx=None):
     """Build (server, pool-or-None) from parsed CLI args."""
+    if ctx is None:
+        ctx = PlanContext.from_world(cfg, params, corpus, tok, index=None,
+                                     buckets=(1, 8, 64, 256))
     if args.server == "simple":
-        scorer = BK.make_scorer(args.backend, params, cfg,
-                                buckets=(1, 8, 64, 256))
+        scorer = ctx.scorer_for(args.backend)
         handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
                                               cfg.max_len)
         return SV.SimpleServer(handler, host=args.host, port=args.port), None
     pool = ReplicaPool.build(args.backend, params, cfg, tok, corpus.idf,
                              n_replicas=args.replicas,
-                             buckets=(1, 8, 64, 256), policy=args.policy)
+                             buckets=ctx.buckets or (1, 8, 64, 256),
+                             policy=args.policy)
     admission = (AdmissionController(max_queue_rows=args.max_queue)
                  if args.max_queue > 0 else None)
     srv = SV.ThreadPoolServer(pool, host=args.host, port=args.port,
                               num_workers=args.workers, admission=admission)
     return srv, pool
+
+
+class _Unconnected:
+    """Placeholder remote endpoint: lowers but refuses to score."""
+
+    def get_score_batch(self, pairs):
+        raise RuntimeError("no server connected (--describe only lowers)")
+
+
+def describe_plans(args, cfg, params, corpus, tok, index) -> str:
+    """The canonical pipeline, lowered to all three execution targets."""
+    pipeline = (ops.Retrieve(h=10) >> ops.DynamicCutoff(margin=3.0)
+                >> ops.Rerank(args.backend, k=3))
+    ctx = PlanContext.from_world(cfg, params, corpus, tok, index,
+                                 remote=_Unconnected())
+    lines = [f"pipeline: {pipeline!r}"]
+    for target in ("local", "batched", "remote"):
+        lines.append("  " + plan(pipeline, target, ctx).describe())
+    return "\n".join(lines)
 
 
 def main():
@@ -59,9 +91,15 @@ def main():
                          "(0 disables admission control)")
     ap.add_argument("--workers", type=int, default=8,
                     help="threadpool connection workers")
+    ap.add_argument("--describe", action="store_true",
+                    help="print the canonical pipeline lowered to the "
+                         "local/batched/remote execution plans, then exit")
     args = ap.parse_args()
 
     cfg, params, corpus, tok, index, _ = build_world(args.train_steps)
+    if args.describe:
+        print(describe_plans(args, cfg, params, corpus, tok, index))
+        return
     srv, pool = build_server(args, cfg, params, corpus, tok)
     mode = (f"{args.server}" if args.server == "simple" else
             f"{args.server} x{args.replicas} {args.policy} "

@@ -16,6 +16,14 @@ Two submission granularities share one queue and one worker:
 Sub-batches stay contiguous in the coalesced scorer call and resolve with
 one future, so a batched pipeline pays one enqueue + one wakeup per query
 batch instead of one per candidate pair.
+
+Deadline propagation: ``submit``/``submit_many`` accept an absolute
+``deadline_abs`` (``time.perf_counter`` clock). Admission control sheds
+requests whose deadline can't be met *before* they enqueue, but a request
+admitted with budget to spare can still expire while it waits behind a slow
+batch — those items are dropped at dequeue (their future raises
+``wire.ShedError("expired")``, which servers translate to a MSG_SHED reply)
+instead of wasting scorer time on an answer nobody is waiting for.
 """
 from __future__ import annotations
 
@@ -28,16 +36,23 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.wire import ShedError
+from repro.serving.admission import SHED_EXPIRED
+
 
 class _Item:
     """One queue entry: ``n`` rows scored together, one future.
 
     ``single`` marks a scalar ``submit`` (future resolves to float);
-    otherwise the future resolves to the (n,) score array."""
+    otherwise the future resolves to the (n,) score array.
+    ``deadline_abs`` (perf_counter clock) marks when the caller stops
+    caring; ``None`` never expires."""
 
-    __slots__ = ("q_tok", "a_tok", "feats", "n", "single", "future")
+    __slots__ = ("q_tok", "a_tok", "feats", "n", "single", "future",
+                 "deadline_abs")
 
-    def __init__(self, q_tok, a_tok, feats, single: bool):
+    def __init__(self, q_tok, a_tok, feats, single: bool,
+                 deadline_abs: Optional[float] = None):
         q_tok, a_tok = np.asarray(q_tok), np.asarray(a_tok)
         feats = np.asarray(feats)
         if single:
@@ -47,6 +62,7 @@ class _Item:
         self.feats = feats
         self.n = q_tok.shape[0]
         self.single = single
+        self.deadline_abs = deadline_abs
         self.future: Future = Future()
 
 
@@ -61,6 +77,7 @@ class MicroBatcher:
         self._lock = threading.Lock()
         self._outstanding_rows = 0
         self._rows_scored = 0
+        self._rows_shed = 0
         self._row_scorer_s: Optional[float] = None
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._running = True
@@ -103,14 +120,19 @@ class MicroBatcher:
             self._outstanding_rows -= n
 
     def submit(self, q_tok: np.ndarray, a_tok: np.ndarray,
-               feats: np.ndarray) -> "Future[float]":
-        return self._enqueue(_Item(q_tok, a_tok, feats, single=True))
+               feats: np.ndarray,
+               deadline_abs: Optional[float] = None) -> "Future[float]":
+        return self._enqueue(_Item(q_tok, a_tok, feats, single=True,
+                                   deadline_abs=deadline_abs))
 
     def submit_many(self, q_tok: np.ndarray, a_tok: np.ndarray,
-                    feats: np.ndarray) -> "Future[np.ndarray]":
+                    feats: np.ndarray,
+                    deadline_abs: Optional[float] = None
+                    ) -> "Future[np.ndarray]":
         """Enqueue an (n, ...) sub-batch; the future resolves to all n scores
         at once (empty sub-batches resolve immediately)."""
-        item = _Item(q_tok, a_tok, feats, single=False)
+        item = _Item(q_tok, a_tok, feats, single=False,
+                     deadline_abs=deadline_abs)
         if item.n == 0:
             item.future.set_result(np.zeros((0,), np.float32))
             return item.future
@@ -143,9 +165,23 @@ class MicroBatcher:
             rows += nxt.n
         return items
 
+    def _expire(self, items: List[_Item]) -> List[_Item]:
+        """Drop already-expired items at dequeue: their budget burned away
+        in the queue, so scoring them would only delay the live ones."""
+        now = time.perf_counter()
+        live = []
+        for i in items:
+            if i.deadline_abs is not None and now >= i.deadline_abs:
+                with self._lock:
+                    self._rows_shed += i.n
+                i.future.set_exception(ShedError(SHED_EXPIRED))
+            else:
+                live.append(i)
+        return live
+
     def _loop(self):
         while self._running:
-            items = self._drain()
+            items = self._expire(self._drain())
             if not items:
                 continue
             try:
@@ -176,9 +212,11 @@ class MicroBatcher:
     def stats(self) -> dict:
         with self._lock:
             rows, out = self._rows_scored, self._outstanding_rows
+            shed = self._rows_shed
             sizes = list(self.batch_sizes)  # snapshot: worker appends
         return {
             "rows_scored": float(rows),
+            "rows_shed": float(shed),
             "outstanding_rows": float(out),
             "batches": float(len(sizes)),
             "mean_batch": float(np.mean(sizes)) if sizes else 0.0,

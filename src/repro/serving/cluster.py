@@ -27,8 +27,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.wire import ShedError
 from repro.data.featurize import FeaturizationCache
 from repro.data.tokenizer import HashingTokenizer
+from repro.serving.admission import SHED_EXPIRED
 from repro.serving.batcher import MicroBatcher
 from repro.serving.stats import LatencyTracker
 
@@ -54,6 +56,11 @@ class Replica:
 
 
 class ReplicaPool:
+    #: core.service passes the decoded wire deadline through ``get_scores``
+    #: so the replica's MicroBatcher can drop already-expired work at
+    #: dequeue (see serving.batcher deadline propagation).
+    supports_deadline = True
+
     def __init__(self, scorers: Sequence, tokenizer: HashingTokenizer,
                  idf: Dict[str, float], max_len: int,
                  policy: str = "least_outstanding",
@@ -107,17 +114,26 @@ class ReplicaPool:
                 np.stack([r[1] for r in rows]),
                 np.stack([r[2] for r in rows]))
 
-    def submit(self, pairs: Sequence[Tuple[str, str]]):
+    def submit(self, pairs: Sequence[Tuple[str, str]],
+               deadline_abs: Optional[float] = None):
         """Route one request's pairs to a replica; returns the future."""
         q_tok, a_tok, feats = self._featurize_batch(pairs)
-        return self._pick().batcher.submit_many(q_tok, a_tok, feats)
+        return self._pick().batcher.submit_many(q_tok, a_tok, feats,
+                                                deadline_abs=deadline_abs)
 
-    def get_scores(self, pairs: Sequence[Tuple[str, str]]) -> np.ndarray:
-        """``QuestionAnsweringHandler``-compatible blocking entry point."""
+    def get_scores(self, pairs: Sequence[Tuple[str, str]],
+                   deadline_abs: Optional[float] = None) -> np.ndarray:
+        """``QuestionAnsweringHandler``-compatible blocking entry point.
+        Raises ``wire.ShedError`` if the request expired in the batcher
+        queue before being scored (dropped at dequeue)."""
         if not pairs:
             return np.zeros((0,), np.float32)
+        # Already expired on arrival: shed before paying featurization
+        # (per-pair tokenize + overlap features hold the GIL).
+        if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
-        out = np.asarray(self.submit(pairs).result())
+        out = np.asarray(self.submit(pairs, deadline_abs).result())
         self.tracker.observe(time.perf_counter() - t0, n=len(pairs))
         return out
 

@@ -1,25 +1,38 @@
-"""ServingEngine: the batcher + tracker wrapped behind the paper's
-``getScore`` interface, pluggable into core.service as a drop-in handler.
+"""Serving engines behind the paper's RPC interface.
 
+``ServingEngine``: the batcher + tracker wrapped behind the paper's
+``getScore`` interface, pluggable into core.service as a drop-in handler.
 Featurization (tokenize + overlap features) is memoized through a bounded
 LRU (``data.featurize.FeaturizationCache``) so repeated (question, answer)
 pairs — the common case under production traffic — skip string processing
 entirely; batch requests go through ``MicroBatcher.submit_many`` as one
-contiguous sub-batch instead of per-pair futures."""
+contiguous sub-batch instead of per-pair futures.
+
+``PipelineEngine``: the multi-stage analogue, routed through the
+declarative pipeline API (``repro.core.ops`` + ``repro.core.plan``) — it
+serves a whole composed ranking pipeline (``rank``/``rank_many``) under one
+latency tracker, lowering the description to whichever execution target the
+deployment wants instead of hard-coding an engine class per strategy."""
 from __future__ import annotations
 
 import time
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.wire import ShedError
 from repro.data.featurize import FeaturizationCache
 from repro.data.tokenizer import HashingTokenizer
+from repro.serving.admission import SHED_EXPIRED
 from repro.serving.batcher import MicroBatcher
 from repro.serving.stats import LatencyTracker
 
 
 class ServingEngine:
+    #: core.service passes the wire deadline through get_scores so expired
+    #: sub-batches are dropped at the MicroBatcher dequeue (SHED reply).
+    supports_deadline = True
+
     def __init__(self, scorer, tokenizer: HashingTokenizer,
                  idf: Dict[str, float], max_len: int,
                  max_batch: int = 64, max_wait_s: float = 0.002,
@@ -42,17 +55,23 @@ class ServingEngine:
         self.tracker.observe(time.perf_counter() - t0)
         return out
 
-    def get_scores(self, pairs: Sequence[Tuple[str, str]]) -> np.ndarray:
+    def get_scores(self, pairs: Sequence[Tuple[str, str]],
+                   deadline_abs: Optional[float] = None) -> np.ndarray:
         """service.QuestionAnsweringHandler-compatible batch entry point:
-        one featurization pass, one sub-batch enqueue, one future."""
+        one featurization pass, one sub-batch enqueue, one future. Raises
+        ``wire.ShedError`` if the deadline expires in the batcher queue."""
         if not pairs:
             return np.zeros((0,), np.float32)
+        # Already expired on arrival: shed before paying featurization.
+        if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
         rows = [self._featurize(q, a) for q, a in pairs]
         q_tok = np.stack([r[0] for r in rows])
         a_tok = np.stack([r[1] for r in rows])
         feats = np.stack([r[2] for r in rows])
-        out = self.batcher.submit_many(q_tok, a_tok, feats).result()
+        out = self.batcher.submit_many(q_tok, a_tok, feats,
+                                       deadline_abs=deadline_abs).result()
         self.tracker.observe(time.perf_counter() - t0)
         return np.asarray(out)
 
@@ -64,3 +83,42 @@ class ServingEngine:
 
     def stop(self):
         self.batcher.stop()
+
+
+class PipelineEngine:
+    """Serve one declarative ranking pipeline end to end.
+
+    Wraps ``plan(pipeline, target, ctx)`` with per-request latency tracking
+    and cache/stat reporting, so deployments pick an execution strategy by
+    *name* ("local" | "batched" | "remote") instead of by engine class. The
+    description is the single source of truth: the same ``pipeline`` value
+    a notebook runs locally is the one the cluster serves batched or
+    remote.
+    """
+
+    def __init__(self, pipeline, ctx, target: str = "batched"):
+        from repro.core.plan import plan as _plan
+        self.pipeline = pipeline
+        self.plan = _plan(pipeline, target, ctx)
+        self.tracker = LatencyTracker()
+
+    def rank(self, query: str):
+        t0 = time.perf_counter()
+        out = self.plan.run(query)
+        self.tracker.observe(time.perf_counter() - t0)
+        return out
+
+    def rank_many(self, queries: Sequence[str]):
+        t0 = time.perf_counter()
+        out = self.plan.run_many(queries)
+        self.tracker.observe(time.perf_counter() - t0,
+                             n=max(len(queries), 1))
+        return out
+
+    def describe(self) -> str:
+        return self.plan.describe()
+
+    def stats(self) -> Dict[str, float]:
+        s = self.tracker.summary()
+        s.update(self.plan.cache_stats())
+        return s

@@ -1,0 +1,175 @@
+"""Deadline propagation into the MicroBatcher (expired work dropped at
+dequeue with a SHED reply) and the client-side shed-retry budget with
+exponential backoff."""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core import service as SV
+from repro.data.tokenizer import HashingTokenizer
+from repro.serving.batcher import MicroBatcher
+from repro.serving.cluster import ReplicaPool
+
+
+def _stub_scorer(q_tok, a_tok, feats):
+    return np.full((q_tok.shape[0],), 0.5, np.float32)
+
+
+def _rows(n=2, width=4):
+    return (np.zeros((n, width), np.int32), np.zeros((n, width), np.int32),
+            np.zeros((n, 4), np.float32))
+
+
+# ----------------------------------------------------------- micro-batcher --
+
+def test_batcher_drops_expired_at_dequeue():
+    mb = MicroBatcher(_stub_scorer, max_batch=8, max_wait_s=0.001)
+    try:
+        expired = mb.submit_many(*_rows(3),
+                                 deadline_abs=time.perf_counter() - 1.0)
+        with pytest.raises(wire.ShedError, match="expired"):
+            expired.result(timeout=2.0)
+        # live work still flows, and the shed rows are accounted
+        live = mb.submit_many(*_rows(2), deadline_abs=time.perf_counter() + 60)
+        assert live.result(timeout=2.0) == pytest.approx([0.5, 0.5])
+        stats = mb.stats()
+        assert stats["rows_shed"] == 3.0
+        assert stats["rows_scored"] == 2.0
+        assert mb.outstanding_rows == 0      # shed rows settle the counter
+    finally:
+        mb.stop()
+
+
+def test_batcher_without_deadline_never_sheds():
+    mb = MicroBatcher(_stub_scorer, max_batch=8, max_wait_s=0.001)
+    try:
+        q, a, f = _rows(1)
+        assert mb.submit(q[0], a[0], f[0]).result(timeout=2.0) == \
+            pytest.approx(0.5)
+        assert mb.stats()["rows_shed"] == 0.0
+    finally:
+        mb.stop()
+
+
+# ----------------------------------------------------------- replica pool --
+
+def test_pool_sheds_expired_get_scores():
+    tok = HashingTokenizer(512)
+    pool = ReplicaPool([_stub_scorer], tok, idf={}, max_len=8)
+    try:
+        pairs = [("what is x", "x is y")]
+        with pytest.raises(wire.ShedError, match="expired"):
+            pool.get_scores(pairs, deadline_abs=time.perf_counter() - 1.0)
+        out = pool.get_scores(pairs)            # no deadline: scored
+        assert out == pytest.approx([0.5])
+    finally:
+        pool.stop()
+
+
+def test_server_replies_shed_for_expired_deadline():
+    """End to end: an already-expired wire deadline survives admission (the
+    SimpleServer has none) but is dropped at the batcher dequeue and
+    answered with MSG_SHED."""
+    tok = HashingTokenizer(512)
+    pool = ReplicaPool([_stub_scorer], tok, idf={}, max_len=8)
+    srv = SV.SimpleServer(pool).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            with pytest.raises(wire.ShedError, match="expired"):
+                cl.get_score("q", "a", deadline_s=-1.0)
+            assert cl.get_score("q", "a") == pytest.approx(0.5)
+    finally:
+        srv.stop()
+        pool.stop()
+
+
+# ------------------------------------------------------ client retry budget --
+
+def _shedding_server(n_sheds):
+    """Raw wire-protocol stub: answer the first ``n_sheds`` requests with
+    MSG_SHED, then real replies. Returns (address, sock, thread)."""
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    sock.bind(("127.0.0.1", 0))
+    sock.listen(4)
+    state = {"sheds_left": n_sheds, "requests": 0}
+
+    def loop():
+        while True:
+            try:
+                conn, _ = sock.accept()
+            except OSError:
+                return
+            with conn:
+                while True:
+                    try:
+                        t, payload = wire.read_frame(conn)
+                    except (ConnectionError, OSError, ValueError):
+                        break
+                    if not t:
+                        break
+                    state["requests"] += 1
+                    if state["sheds_left"] > 0:
+                        state["sheds_left"] -= 1
+                        conn.sendall(wire.encode_shed("queue_full"))
+                    else:
+                        conn.sendall(wire.encode_reply([0.25]))
+
+    t = threading.Thread(target=loop, daemon=True)
+    t.start()
+    return sock.getsockname(), sock, state
+
+
+def test_client_retries_sheds_within_budget():
+    address, sock, state = _shedding_server(n_sheds=2)
+    try:
+        cl = SV.Client(address, retry_sheds=3, backoff_s=0.001)
+        assert cl.get_score("q", "a") == pytest.approx(0.25)
+        assert cl.shed_retries == 2
+        assert state["requests"] == 3
+        cl.close()
+    finally:
+        sock.close()
+
+
+def test_client_retry_budget_caps_and_surfaces_overload():
+    address, sock, state = _shedding_server(n_sheds=100)
+    try:
+        cl = SV.Client(address, retry_sheds=2, backoff_s=0.001)
+        with pytest.raises(wire.ShedError):
+            cl.get_score("q", "a")
+        assert state["requests"] == 3        # 1 try + 2 retries, then stop
+        cl.close()
+    finally:
+        sock.close()
+
+
+def test_client_default_does_not_retry_sheds():
+    address, sock, state = _shedding_server(n_sheds=100)
+    try:
+        cl = SV.Client(address)
+        with pytest.raises(wire.ShedError):
+            cl.get_score("q", "a")
+        assert state["requests"] == 1
+        cl.close()
+    finally:
+        sock.close()
+
+
+def test_retry_backoff_is_exponential_and_capped():
+    address, sock, state = _shedding_server(n_sheds=3)
+    try:
+        cl = SV.Client(address, retry_sheds=3, backoff_s=0.02,
+                       backoff_max_s=0.03)
+        t0 = time.perf_counter()
+        assert cl.get_score("q", "a") == pytest.approx(0.25)
+        elapsed = time.perf_counter() - t0
+        # sleeps: 0.02 + min(0.04, 0.03) + min(0.08, 0.03) = 0.08s
+        assert elapsed >= 0.08
+        cl.close()
+    finally:
+        sock.close()

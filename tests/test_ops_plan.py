@@ -1,0 +1,255 @@
+"""Declarative pipeline algebra (core.ops) + planner (core.plan):
+construction/normalization unit tests, fuse interpolation, k-pushdown into
+scorer buckets, and local/batched/remote plan equivalence per backend."""
+import pickle
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import bm25 as BM
+from repro.core import ops
+from repro.core import pipeline as PL
+from repro.core import service as SV
+from repro.core.plan import (FuseStage, PlanContext, PlanError, _LocalChild,
+                             bucket_ladder, plan, verify_plans)
+from repro.data import qa as QA
+from repro.data.featurize import FeaturizationCache
+from repro.data.tokenizer import HashingTokenizer
+from repro.models import sm_cnn
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_config("sm-cnn"))
+    corpus = QA.generate_corpus(n_docs=40, n_questions=24, seed=3)
+    tok = HashingTokenizer(cfg.vocab_size)
+    index = BM.build_index([tok.encode(" ".join(d)) for d in corpus.documents],
+                           cfg.vocab_size)
+    params = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    return cfg, params, corpus, tok, index
+
+
+def _ctx(world, **kw) -> PlanContext:
+    cfg, params, corpus, tok, index = world
+    return PlanContext.from_world(cfg, params, corpus, tok, index, **kw)
+
+
+# ---------------------------------------------------------------- algebra --
+
+def test_compose_flattens_and_mod_is_cutoff():
+    p = ops.Retrieve(h=20) >> (ops.Rerank("jit") >> ops.Cutoff(50)) >> \
+        ops.Rerank("numpy") % 10
+    assert isinstance(p, ops.Pipeline)
+    kinds = [type(s).__name__ for s in p.steps]
+    assert kinds == ["Retrieve", "Rerank", "Cutoff", "Rerank", "Cutoff"]
+    assert p.steps[-1].k == 10
+
+
+def test_or_builds_uniform_fuse():
+    f = ops.Rerank("jit") | ops.Rerank("numpy") | ops.Rerank("eager")
+    assert isinstance(f, ops.Fuse)
+    assert len(f.children) == 3
+    assert f.weights == (pytest.approx(1 / 3),) * 3
+    with pytest.raises(TypeError):
+        ops.Rerank("jit") | ops.Cutoff(5)
+
+
+def test_fuse_validation():
+    with pytest.raises(ValueError):     # weights/children length mismatch
+        ops.Fuse((ops.Rerank("a"), ops.Rerank("b")), (1.0,))
+    with pytest.raises(ValueError):     # child truncation breaks fusion
+        ops.Fuse((ops.Rerank("a", k=5), ops.Rerank("b")), (0.5, 0.5))
+    with pytest.raises(ValueError):     # fusion of one thing is no fusion
+        ops.Fuse((ops.Rerank("a"),), (1.0,))
+
+
+def test_pipeline_is_a_pure_value():
+    p = ops.Retrieve(h=20) >> (ops.Rerank("jit") | ops.Rerank("numpy")) % 10
+    assert repr(p) == ("Retrieve(h=20) >> (Rerank('jit') | Rerank('numpy'))"
+                       " >> Cutoff(10)")
+    assert repr(pickle.loads(pickle.dumps(p))) == repr(p)
+
+
+def test_normalize_merges_adjacent_cutoffs():
+    p = ops.Retrieve(h=9) >> ops.Cutoff(9) >> ops.Cutoff(4) >> ops.Cutoff(7)
+    steps = ops.normalize(p).steps
+    assert [type(s).__name__ for s in steps] == ["Retrieve", "Cutoff"]
+    assert steps[1].k == 4
+
+
+def test_normalize_folds_cutoff_into_rerank():
+    steps = ops.normalize(ops.Retrieve() >> ops.Rerank("jit") % 5).steps
+    assert [type(s).__name__ for s in steps] == ["Retrieve", "Rerank"]
+    assert steps[1].k == 5
+    # an existing tighter k wins
+    steps = ops.normalize(
+        ops.Retrieve() >> ops.Rerank("jit", k=3) % 5).steps
+    assert steps[1].k == 3
+
+
+def test_normalize_folds_cutoff_into_fuse():
+    p = ops.Retrieve() >> (ops.Rerank("a") | ops.Rerank("b")) % 10 % 7
+    steps = ops.normalize(p).steps
+    assert [type(s).__name__ for s in steps] == ["Retrieve", "Fuse"]
+    assert steps[1].k == 7
+
+
+def test_bucket_ladder():
+    assert bucket_ladder(None) == (1, 8, 64, 256)
+    assert bucket_ladder(1) == (1,)
+    assert bucket_ladder(5) == (1, 8)
+    assert bucket_ladder(60) == (1, 8, 64)
+    assert bucket_ladder(1920) == (1, 8, 64, 256, 1024, 4096)
+
+
+def test_topk_stage_stable_truncation():
+    cands = [PL.Candidate(i, 0, f"c{i}", s)
+             for i, s in enumerate([1.0, 3.0, 2.0, 3.0])]
+    out = PL.TopKStage(3).run("q", cands)
+    # stable: the two 3.0-ties keep input order (doc 1 before doc 3)
+    assert [c.doc_id for c in out] == [1, 3, 2]
+
+
+# ---------------------------------------------------------------- planner --
+
+def test_plan_errors(world):
+    ctx = _ctx(world)
+    with pytest.raises(PlanError):
+        plan(ops.Retrieve() >> ops.Rerank("jit"), "warp", ctx)
+    with pytest.raises(PlanError):    # must start with Retrieve
+        plan(ops.Pipeline((ops.Rerank("jit"),)), "local", ctx)
+    with pytest.raises(PlanError):    # remote target needs an endpoint
+        plan(ops.Retrieve() >> ops.Rerank("jit"), "remote", ctx)
+    with pytest.raises(PlanError):    # unbound index name
+        plan(ops.Retrieve("missing") >> ops.Rerank("jit"), "local", ctx)
+
+
+def test_k_pushdown_into_scorer_buckets(world):
+    cfg, params, corpus, tok, index = world
+    ctx = _ctx(world)
+    max_sents = max(len(d) for d in corpus.documents)
+    lp = plan(ops.Retrieve(h=4) >> ops.Rerank("jit", k=3), "local", ctx)
+    assert lp.stages[-1].scorer._buckets == bucket_ladder(4 * max_sents)
+    # an upstream cutoff tightens the bound the scorer is built for
+    lp2 = plan(ops.Retrieve(h=4) >> ops.Cutoff(5) >> ops.Rerank("jit"),
+               "local", ctx)
+    assert lp2.stages[-1].scorer._buckets == (1, 8)
+    # batched plans scale the cap by the batch hint
+    bp = plan(ops.Retrieve(h=4) >> ops.Cutoff(5) >> ops.Rerank("jit"),
+              "batched", ctx)
+    assert bp.stages[-1].scorer._buckets == bucket_ladder(
+        5 * ctx.batch_hint)
+
+
+class StubScorer:
+    """Scorer-protocol stub: deterministic scores, no model."""
+
+    _buckets = (64,)
+
+    def __init__(self, name, fn):
+        self.name = name
+        self._fn = fn
+
+    def __call__(self, q_tok, a_tok, feats):
+        return np.asarray(self._fn(q_tok, a_tok, feats), np.float32)
+
+
+def test_fuse_stage_interpolates_scores(world):
+    cfg, params, corpus, tok, index = world
+    cache = FeaturizationCache(tok, corpus.idf, cfg.max_len)
+    n = 6
+    cands = [PL.Candidate(0, i, f"sentence number {i}", 1.0)
+             for i in range(n)]
+    up = StubScorer("up", lambda q, a, f: np.arange(q.shape[0]))
+    down = StubScorer("down", lambda q, a, f: -2.0 * np.arange(q.shape[0]))
+    fuse = FuseStage([_LocalChild(up), _LocalChild(down)], [0.7, 0.3],
+                     cache, k=4)
+    out = fuse.run("which sentence", cands)
+    # fused score of row i = 0.7*i - 0.6*i = 0.1*i -> descending by i
+    assert [c.sent_id for c in out] == [5, 4, 3, 2]
+    assert out[0].score == pytest.approx(0.5)
+    # run_batch must agree with per-query run
+    states = [list(cands), []]
+    outs = fuse.run_batch(["which sentence", "empty"], states)
+    assert [c.sent_id for c in outs[0]] == [5, 4, 3, 2]
+    assert outs[1] == []
+
+
+@pytest.mark.parametrize("backend", ["eager", "jit", "numpy"])
+def test_plan_equivalence_local_batched_remote(world, backend):
+    """One pipeline, three plans, identical rankings — per backend, with
+    the remote plan going through a real server + Client."""
+    cfg, params, corpus, tok, index = world
+    ctx = _ctx(world)
+    handler = SV.QuestionAnsweringHandler(ctx.scorer_for(backend, 200), tok,
+                                          corpus.idf, cfg.max_len)
+    srv = SV.SimpleServer(handler).start_background()
+    try:
+        p = ops.Retrieve(h=8) >> ops.Rerank(backend, k=5)
+        plans = [plan(p, "local", ctx),
+                 plan(p, "batched", ctx),
+                 plan(p, "remote", ctx=ctx, remote=srv.address)]
+        verify_plans(plans, corpus.questions[:10])
+        # the per-query remote path matches the coalesced one
+        q = corpus.questions[0]
+        seq_ids = [(c.doc_id, c.sent_id) for c in plans[2].run(q)[0]]
+        many_ids = [(c.doc_id, c.sent_id)
+                    for c in plans[2].run_many([q])[0][0]]
+        assert seq_ids == many_ids
+    finally:
+        srv.stop()
+
+
+def test_plan_equivalence_fused(world):
+    """Fusion of two integration backends ranks identically under the
+    local and batched plans (shared context -> shared featurization)."""
+    cfg, params, corpus, tok, index = world
+    ctx = _ctx(world)
+    p = ops.Retrieve(h=8) >> (ops.Rerank("jit") | ops.Rerank("numpy")) % 6
+    verify_plans([plan(p, "local", ctx), plan(p, "batched", ctx)],
+                 corpus.questions[:8])
+
+
+def test_remote_plan_through_replica_pool(world):
+    """ctx.remote can be an in-process handler (ReplicaPool) — no sockets."""
+    cfg, params, corpus, tok, index = world
+    from repro.serving.cluster import ReplicaPool
+    ctx = _ctx(world)
+    pool = ReplicaPool([ctx.scorer_for("jit", 200)], tok, corpus.idf,
+                       cfg.max_len)
+    try:
+        p = ops.Retrieve(h=8) >> ops.Rerank("jit", k=5)
+        verify_plans([plan(p, "local", ctx),
+                      plan(p, "remote", ctx=ctx, remote=pool)],
+                     corpus.questions[:8])
+    finally:
+        pool.stop()
+
+
+def test_remote_fuse_per_backend_endpoints(world):
+    """A fused pipeline's remote children resolve per-spec endpoints from a
+    ctx.remote dict (here: two in-process handlers)."""
+    cfg, params, corpus, tok, index = world
+    ctx = _ctx(world)
+    handlers = {b: SV.QuestionAnsweringHandler(ctx.scorer_for(b, 200), tok,
+                                               corpus.idf, cfg.max_len)
+                for b in ("jit", "numpy")}
+    p = ops.Retrieve(h=8) >> (ops.Rerank("jit") | ops.Rerank("numpy")) % 6
+    local = plan(p, "local", ctx)
+    remote = plan(p, "remote", ctx=ctx, remote=handlers)
+    verify_plans([local, remote], corpus.questions[:8])
+
+
+def test_plan_run_and_trace_contract(world):
+    """Plans keep the (candidates, trace) contract of the legacy rankers."""
+    cfg, params, corpus, tok, index = world
+    ctx = _ctx(world)
+    p = ops.Retrieve(h=6) >> ops.Cutoff(12) >> ops.Rerank("numpy", k=3)
+    for target in ("local", "batched"):
+        cands, trace = plan(p, target, ctx).run(corpus.questions[0])
+        assert len(cands) <= 3
+        assert [t.name.split("-")[0] for t in trace] == \
+            ["bm25", "top12", "rerank"]
+        assert all(t.latency_s >= 0 for t in trace)
