@@ -15,6 +15,13 @@ ThreadPoolServer x replicas that extends the paper's Table 2. Shed replies
 under overload a well-behaved cluster sheds fast instead of queueing
 unboundedly.
 
+Ranking-RPC mode (``run_level(mode="rank")``) drives wire-v3 whole-pipeline
+requests (``Client.rank``) instead of pair scoring; ``run_hedged`` stands up
+two pipeline-serving replicas — one artificially slowed — and contrasts the
+p99 of unhedged round-robin dispatch against hedged dispatch
+(``serving.hedge.HedgedTransport``: same code path with the hedge delay set
+to infinity for the unhedged baseline).
+
   PYTHONPATH=src python -m benchmarks.loadgen            # standalone sweep
   PYTHONPATH=src python -m benchmarks.run --table loadgen --json out.json
 """
@@ -41,15 +48,19 @@ def poisson_arrivals(offered_qps: float, duration_s: float,
         out.append(t)
 
 
-def run_level(address: Tuple[str, int], reqs: Sequence[Tuple[str, str]],
+def run_level(address: Tuple[str, int], reqs: Sequence,
               offered_qps: float, duration_s: float, n_conns: int = 4,
-              deadline_s: Optional[float] = None, seed: int = 0
-              ) -> Dict[str, float]:
+              deadline_s: Optional[float] = None, seed: int = 0,
+              mode: str = "score") -> Dict[str, float]:
     """Drive one offered-QPS level with ``n_conns`` persistent connections.
 
     Arrivals are struck round-robin across connections; a connection that
     falls behind its schedule fires immediately and the lateness shows up
     in the measured latency (open-loop semantics).
+
+    ``mode="score"`` drives pair-scoring RPCs (``reqs`` holds (q, a)
+    pairs); ``mode="rank"`` drives v3 whole-pipeline ranking RPCs
+    (``reqs`` holds query strings, one ``Client.rank`` per arrival).
     """
     arrivals = poisson_arrivals(offered_qps, duration_s, seed)
     lock = threading.Lock()
@@ -75,7 +86,7 @@ def run_level(address: Tuple[str, int], reqs: Sequence[Tuple[str, str]],
             wait = at - (time.perf_counter() - t0_box[0])
             if wait > 0:
                 time.sleep(wait)
-            q, a = reqs[i % len(reqs)]
+            req = reqs[i % len(reqs)]
             try:
                 # The deadline is a budget from the SCHEDULED arrival: a
                 # request fired late (connection behind schedule) has
@@ -84,7 +95,10 @@ def run_level(address: Tuple[str, int], reqs: Sequence[Tuple[str, str]],
                 budget = deadline_s
                 if budget is not None:
                     budget -= (time.perf_counter() - t0_box[0]) - at
-                cl.get_score(q, a, deadline_s=budget)
+                if mode == "rank":
+                    cl.rank(req, deadline_s=budget)
+                else:
+                    cl.get_score(req[0], req[1], deadline_s=budget)
                 done = time.perf_counter() - t0_box[0]
                 with lock:
                     lats.append(done - at)
@@ -152,6 +166,109 @@ def sweep(address, reqs, qps_levels: Sequence[float], duration_s: float,
     return [run_level(address, reqs, qps, duration_s, n_conns,
                       deadline_s, seed + i)
             for i, qps in enumerate(qps_levels)]
+
+
+class _SlowRankHandler:
+    """Wrap a pipeline handler with a fixed per-request delay — the
+    'one artificially slow replica' of the hedging experiment (a straggler
+    from GC, paging, a noisy neighbor...)."""
+
+    def __init__(self, inner, delay_s: float):
+        self._inner = inner
+        self._delay_s = delay_s
+        self.rows_per_query = getattr(inner, "rows_per_query", 1)
+
+    def rank_batch(self, queries):
+        time.sleep(self._delay_s)
+        return self._inner.rank_batch(queries)
+
+
+def run_hedged(world=None, backend: str = "jit", n_requests: int = 60,
+               slow_delay_s: float = 0.05, hedge_s: float = 0.005
+               ) -> List[Dict]:
+    """Hedged vs unhedged ranking dispatch over two pipeline replicas, one
+    slowed by ``slow_delay_s`` per request. Round-robin routing means the
+    unhedged client eats the full delay on half its requests; the hedged
+    client races the other replica after ``hedge_s`` and its p99 collapses
+    to roughly hedge delay + fast service time."""
+    from benchmarks.common import build_world
+    from repro.core import ops
+    from repro.core.plan import PlanContext
+    from repro.serving.engine import PipelineEngine
+    from repro.serving.hedge import HedgedTransport
+    from repro.serving.stats import LatencyTracker
+
+    cfg, params, corpus, tok, index, _ = world or build_world()
+    pipeline = ops.Retrieve(h=10) >> ops.Rerank(backend, k=5)
+    queries = corpus.questions[:16]
+
+    def make_engine():
+        return PipelineEngine(
+            pipeline,
+            PlanContext.from_world(cfg, params, corpus, tok, index,
+                                   buckets=(64, 256, 1024)),
+            target="batched")
+
+    fast_eng, slow_eng = make_engine(), make_engine()
+    srv_fast = SV.SimpleServer(fast_eng).start_background()
+    srv_slow = SV.SimpleServer(
+        _SlowRankHandler(slow_eng, slow_delay_s)).start_background()
+
+    rows: List[Dict] = []
+    pct = LatencyTracker._interp_percentile
+    try:
+        for tag, hedge in (("unhedged", float("inf")), ("hedged", hedge_s)):
+            # Two clients (one socket per replica); hedge=inf IS the
+            # unhedged baseline — identical code path, no second attempt.
+            ht = HedgedTransport([SV.Client(srv_fast.address),
+                                  SV.Client(srv_slow.address)],
+                                 hedge_s=hedge)
+            try:
+                ht.rank(queries[0])     # warm compiled entries both ways
+                ht.rank(queries[1])
+                lats = []
+                t0 = time.perf_counter()
+                for i in range(n_requests):
+                    t1 = time.perf_counter()
+                    ht.rank(queries[i % len(queries)])
+                    lats.append(time.perf_counter() - t1)
+                dt = time.perf_counter() - t0
+            finally:
+                ht.close()
+            xs = sorted(lats)
+            s = ht.stats()
+            rows.append({
+                "name": f"loadgen/rank-{tag}",
+                "us_per_call": 1e6 * dt / n_requests,
+                "derived": (f"qps={n_requests / dt:.1f} "
+                            f"p50_ms={pct(xs, 0.50) * 1e3:.2f} "
+                            f"p99_ms={pct(xs, 0.99) * 1e3:.2f} "
+                            f"hedged={int(s['hedged'])} "
+                            f"hedge_wins={int(s['hedge_wins'])}"),
+                "hedge": {"p50_ms": pct(xs, 0.50) * 1e3,
+                          "p99_ms": pct(xs, 0.99) * 1e3,
+                          "slow_delay_ms": slow_delay_s * 1e3,
+                          **s},
+            })
+        # The v3 ranking service under open-loop Poisson load (run_level's
+        # ranking-RPC mode): one Client.rank per scheduled arrival against
+        # the fast replica.
+        lvl = run_level(srv_fast.address, queries, offered_qps=50.0,
+                        duration_s=1.0, n_conns=1, mode="rank")
+        qps = max(lvl["achieved_qps"], 1e-9)
+        rows.append({
+            "name": "loadgen/rank-openloop-offered50",
+            "us_per_call": 1e6 / qps,
+            "derived": (f"qps={lvl['achieved_qps']:.1f} "
+                        f"p50_ms={lvl['p50_ms']:.2f} "
+                        f"p99_ms={lvl['p99_ms']:.2f} "
+                        f"err={int(lvl['n_error'])}"),
+            "loadgen": lvl,
+        })
+    finally:
+        srv_fast.stop()
+        srv_slow.stop()
+    return rows
 
 
 def _make_requests(corpus, pairs, n: int):
@@ -231,6 +348,11 @@ def run(world=None, qps_levels: Sequence[float] = (100.0, 300.0),
     rows.append(to_row(f"{tag}-overload", over))
     srv.stop()
     pool.stop()
+
+    # Tail tolerance: hedged vs unhedged ranking RPCs with one replica
+    # artificially slowed (Dean & Barroso's experiment in miniature).
+    rows += run_hedged(world=(cfg, params, corpus, tok, index, pairs),
+                       backend=backend)
     return rows
 
 

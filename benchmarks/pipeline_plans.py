@@ -1,14 +1,18 @@
-"""One declarative pipeline, three execution plans — throughput comparison.
+"""One declarative pipeline, four execution plans — throughput comparison.
 
 The core claim of the pipeline-algebra redesign: a single description
 
     Retrieve(h=10) >> Rerank(backend, k=5)
 
 executes under the ``local`` (sequential per-query), ``batched``
-(cross-query coalesced), and ``remote`` (rerank dispatched through the RPC
-serving cluster: ``ThreadPoolServer`` over a 2-replica ``ReplicaPool``,
-driven by a ``service.Client``) plans with identical rankings, while the
-batched plan keeps its ~3-5x throughput advantage over the local plan.
+(cross-query coalesced), ``remote`` (rerank pairs dispatched through the
+RPC serving cluster: ``ThreadPoolServer`` over a 2-replica ``ReplicaPool``,
+driven by a ``service.Client``), and ``remote_pipeline`` (the WHOLE cascade
+served behind one wire-v3 ranking RPC per query batch by a
+``PipelineEngine`` handler) plans with identical rankings, while the
+batched plan keeps its ~3-5x throughput advantage over the local plan and
+the ranking RPC beats the per-pair remote plan (query strings cross the
+wire instead of every candidate pair).
 
 Protocol: every plan gets a fresh context (plans from one context share a
 featurization cache), warms on queries disjoint from the measured 32-query
@@ -21,6 +25,7 @@ caches cold for the remote measurement).
 """
 from __future__ import annotations
 
+import gc
 import time
 from typing import Dict, List
 
@@ -49,24 +54,47 @@ def run(world=None, backend: str = "jit", n_queries: int = 60) -> List[Dict]:
 
     # remote execution substrate: threadpool server over a replica pool
     from repro.serving.cluster import ReplicaPool
+    from repro.serving.engine import PipelineEngine
     pool = ReplicaPool.build(backend, params, cfg, tok, corpus.idf,
                              n_replicas=2, buckets=(64, 256, 1024),
                              policy="least_outstanding")
     srv = SV.ThreadPoolServer(pool).start_background()
 
-    def fresh_ctx() -> PlanContext:
+    # remote_pipeline substrate: the same cascade served whole behind the
+    # v3 ranking RPC. The engine's rerank dispatches into its OWN 2-replica
+    # pool (in-process, same chunk size as the pair plan's RPCs), so remote
+    # and remote_pipeline run the exact same scoring substrate and the
+    # measured difference is purely the RPC boundary: one ranking RPC per
+    # query batch vs ~5 chunked pair RPCs shipping every candidate string.
+    # (A separate pool, not `pool`: sharing would let the pair plan's
+    # measurement warm the ranking server's featurization cache.)
+    rank_pool = ReplicaPool.build(backend, params, cfg, tok, corpus.idf,
+                                  n_replicas=2, buckets=(64, 256, 1024),
+                                  policy="least_outstanding")
+    engine = PipelineEngine(
+        pipeline, PlanContext.from_world(cfg, params, corpus, tok, index,
+                                         remote=rank_pool),
+        target="remote")
+    rank_srv = SV.ThreadPoolServer(engine).start_background()
+
+    def fresh_ctx(remote) -> PlanContext:
         # one context (so one featurization cache) per plan: a shared cache
         # would let the first measured plan warm the later ones
         return PlanContext.from_world(cfg, params, corpus, tok, index,
-                                      remote=srv.address)
+                                      remote=remote)
 
-    plans = {t: plan(pipeline, t, fresh_ctx())
+    plans = {t: plan(pipeline, t, fresh_ctx(srv.address))
              for t in ("local", "batched", "remote")}
+    plans["remote_pipeline"] = plan(pipeline, "remote_pipeline",
+                                    fresh_ctx(rank_srv.address))
     rows: List[Dict] = []
     timings: Dict[str, float] = {}
     try:
         for name, p in plans.items():
             p.run_many(warm)            # disjoint warm-up: compiled entries
+            gc.collect()                # pay the accumulated allocation
+            # debt NOW: otherwise one arbitrary plan (whichever is measured
+            # when the gen-2 threshold trips) eats a ~60ms GC pause
             t0 = time.perf_counter()    # + caches never see measured pairs
             if name == "local":
                 for q in measured:
@@ -80,11 +108,17 @@ def run(world=None, backend: str = "jit", n_queries: int = 60) -> List[Dict]:
             p.close()
         srv.stop()
         pool.stop()
+        rank_srv.stop()
+        rank_pool.stop()
 
     for name, dt in timings.items():
         derived = f"qps={len(measured) / dt:.1f}"
         if name != "local":
             derived += f" speedup={timings['local'] / dt:.2f}x"
+        if name == "remote_pipeline":
+            # the acceptance metric: one ranking RPC per query batch vs the
+            # per-pair remote plan's chunked pair RPCs
+            derived += f" vs_pair_rpc={timings['remote'] / dt:.2f}x"
         rows.append({"name": f"pipeline_plans/{backend}-{name}",
                      "us_per_call": 1e6 * dt / len(measured),
                      "derived": derived})

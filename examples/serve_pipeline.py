@@ -35,9 +35,18 @@ algebra (repro.core.ops) and lowers it to three execution plans
              whole batch, one LRU-cached featurization pass, bucketed
              scorer batches — identical rankings, reported with speedup;
   remote   — the SAME pipeline with its rerank stage dispatching pairs
-             through the RPC server stood up above.
+             through the RPC server stood up above;
+  remote_pipeline
+           — the SAME pipeline served WHOLE behind a second server (wire v3
+             MSG_RANK_BATCH, handler = serving.engine.PipelineEngine): the
+             client ships query strings, one RPC per batch, and gets ranked
+             (doc_id, sent_id, score) lists back — no candidate pair ever
+             crosses the wire. (``python -m repro.launch.serve
+             --serve-pipeline`` stands up the same thing as a CLI service;
+             lists of endpoints hedge through serving.hedge.)
 """
 import argparse
+import gc
 import time
 
 import numpy as np
@@ -107,13 +116,23 @@ def main():
     print(f"  batched(64)          QPS={64/bdt:8.1f}")
     client.close()
 
-    print("\n== one pipeline, three execution plans ==")
+    print("\n== one pipeline, four execution plans ==")
     pipeline = (ops.Retrieve(h=10) >> ops.DynamicCutoff(margin=3.0)
                 >> ops.Rerank(args.backend) % 3)
     print(f"  pipeline: {pipeline!r}")
+    # whole-pipeline ranking service (wire v3): a second server whose
+    # handler lowers and runs the SAME description server-side
+    from repro.serving.engine import PipelineEngine
+    rank_engine = PipelineEngine(
+        pipeline, PlanContext.from_world(cfg, params, corpus, tok, index,
+                                         buckets=(1, 8, 64, 256)),
+        target="batched")
+    rank_srv = SV.ThreadPoolServer(rank_engine).start_background()
     plans = {t: plan(pipeline, t, ctx) for t in ("local", "batched")}
     # remote: the same pipeline, rerank dispatched through the live server
     plans["remote"] = plan(pipeline, "remote", ctx=ctx, remote=srv.address)
+    plans["remote_pipeline"] = plan(pipeline, "remote_pipeline", ctx=ctx,
+                                    remote=rank_srv.address)
     for p in plans.values():
         print(f"  {p.describe()}")
 
@@ -127,10 +146,20 @@ def main():
         if final:
             print(f"     A: {final[0].text}  (score {final[0].score:.3f})")
 
-    # Release the answer section's connection first: the SimpleServer
+    print("\n== one ranking RPC, whole cascade server-side ==")
+    q = corpus.questions[3]
+    final, trace = plans["remote_pipeline"].run(q)
+    print(f"  Q: {q}")
+    print(f"     {trace[0].name}: {len(final)} ranked answers in "
+          f"{trace[0].latency_s*1e3:.1f}ms (one MSG_RANK_BATCH round trip)")
+    if final:
+        print(f"     A: {final[0].text}  (score {final[0].score:.3f})")
+
+    # Release the answer sections' connections first: the SimpleServer
     # serves one connection at a time, so a second live client would
     # queue behind it forever.
     plans["remote"].close()
+    plans["remote_pipeline"].close()
 
     print("\n== plan throughput (32-query batch, identical rankings) ==")
     queries = corpus.questions[:32]
@@ -143,10 +172,16 @@ def main():
                                              buckets=(1, 8, 64, 256),
                                              remote=srv.address))
               for t in ("local", "batched", "remote")}
+    tplans["remote_pipeline"] = plan(
+        pipeline, "remote_pipeline",
+        PlanContext.from_world(cfg, params, corpus, tok, index,
+                               buckets=(1, 8, 64, 256),
+                               remote=rank_srv.address))
     timings = {}
     for name, p in tplans.items():
         p.run_many(warm)            # measured queries stay cold
-        t0 = time.perf_counter()
+        gc.collect()                # don't let one plan eat the whole
+        t0 = time.perf_counter()    # session's gen-2 GC pause mid-timing
         results = p.run_many(queries)
         timings[name] = time.perf_counter() - t0
         assert len(results) == len(queries)
@@ -162,6 +197,7 @@ def main():
     for p in tplans.values():
         p.close()
     srv.stop()
+    rank_srv.stop()
     if pool is not None:
         print("  cluster stats: " + " ".join(
             f"{k}={v:.1f}" for k, v in sorted(pool.stats().items())

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Per-PR perf snapshot: run the pipeline_plans benchmark table (quick mode)
+# and drop the machine-readable rows at the repo root, so the perf
+# trajectory accumulates one JSON per PR.
+#
+#   scripts/bench_snapshot.sh            # writes BENCH_pr5.json
+#   scripts/bench_snapshot.sh pr6        # writes BENCH_pr6.json
+#
+# The snapshot covers the four execution plans (local / batched / remote /
+# remote_pipeline) with qps + speedup columns; compare files across PRs to
+# catch regressions (see ROADMAP "Open items" for the loadgen soak gate).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+tag="${1:-pr5}"
+out="BENCH_${tag}.json"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --table pipeline_plans --json "$out"
+echo "snapshot written to $out"

@@ -18,6 +18,20 @@ targets:
            local; ``run_many`` coalesces all queries' pairs into chunked
            batch RPCs.
 
+  remote_pipeline
+           the WHOLE cascade runs server-side behind wire v3 MSG_RANK /
+           MSG_RANK_BATCH (a ``serving.engine.PipelineEngine`` handler):
+           the client sends query strings — one RPC per query batch — and
+           gets ranked (doc_id, sent_id, score) lists back, rebuilding
+           candidate text from the context's bound documents. This is the
+           cheapest wire footprint by far: no candidate pairs ever cross
+           the RPC boundary.
+
+Remote endpoints may be given as a LIST of endpoints, which enables hedged
+dispatch (``serving.hedge.HedgedTransport``): slow requests race a second
+replica after a p95-based hedge delay (``ctx.hedge_ms`` forces a fixed
+delay) and the first answer wins.
+
 Plan-level optimizations applied at lowering time:
 
   * ``ops.normalize``: adjacent Cutoff merging, folding a Cutoff into the
@@ -40,6 +54,7 @@ tolerating order swaps only between float-level score ties).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -49,7 +64,7 @@ from repro.core import pipeline as PL
 from repro.core.batch_pipeline import BatchedMultiStageRanker
 from repro.data.featurize import FeaturizationCache
 
-TARGETS = ("local", "batched", "remote")
+TARGETS = ("local", "batched", "remote", "remote_pipeline")
 
 #: Bucket ladder bounds: entries grow 1 -> 8 -> 64 -> x4 up to this cap.
 MAX_BUCKET = 4096
@@ -94,9 +109,14 @@ class PlanContext:
 
     ``remote`` may be a ``(host, port)`` address (a ``service.Client`` with
     a shed-retry budget is created lazily), an object with
-    ``get_score_batch`` or ``get_scores``, or a dict mapping scorer specs to
-    any of those (key "default" is the fallback) so fused remote stages can
-    hit different endpoints per backend.
+    ``get_score_batch`` or ``get_scores``, a LIST of either (hedged
+    dispatch: two endpoints raced through ``serving.hedge.HedgedTransport``
+    with a p95-based — or fixed ``hedge_ms`` — hedge delay), or a dict
+    mapping scorer specs to any of those (key "default" is the fallback) so
+    fused remote stages can hit different endpoints per backend. The
+    ``remote_pipeline`` target resolves the same binding but requires
+    ranking-capable endpoints (``rank_batch``: a ``service.Client`` address
+    or a ``serving.engine.PipelineEngine``).
     """
 
     tokenizer: Any
@@ -114,6 +134,18 @@ class PlanContext:
     remote: Any = None
     remote_retries: int = 2
     remote_backoff_s: float = 0.005
+    #: Fixed hedge delay in milliseconds for list-of-endpoints remotes;
+    #: ``None`` lets the HedgedTransport adapt (p95 of observed latency).
+    hedge_ms: Optional[float] = None
+    #: Max queries per ranking RPC (remote_pipeline target). ``None`` sends
+    #: the whole query batch as ONE RPC — the design point, and safe
+    #: against servers whose admission bound covers a batch (launch.serve
+    #: auto-raises its bound to a 32-query batch of row estimates). Set a
+    #: chunk when driving huge batches at a tightly-bounded server: the
+    #: server sizes a ranking request at len(queries) x rows_per_query,
+    #: and a single RPC past its bound is a permanent too_large error
+    #: (same rationale as ``remote_chunk`` for pair RPCs).
+    rank_chunk: Optional[int] = None
     #: Max pairs per remote scoring RPC. Coalesced run_many calls are
     #: chunked at this size so one query batch never exceeds a server's
     #: admission bound (default max_queue_rows=512 in launch.serve) — an
@@ -166,8 +198,14 @@ class PlanContext:
                                                 buckets=buckets)
         return self._scorers[key]
 
-    def transport_for(self, spec):
-        """The remote scoring endpoint for a rerank spec (see class doc)."""
+    @staticmethod
+    def _is_address(remote) -> bool:
+        """A ``(host, port)`` pair — as opposed to a list of endpoints."""
+        return (isinstance(remote, tuple) and len(remote) == 2
+                and isinstance(remote[0], str)
+                and isinstance(remote[1], int))
+
+    def _resolve_remote(self, spec):
         remote = self.remote
         if isinstance(remote, dict):
             key = spec if isinstance(spec, str) else "default"
@@ -175,25 +213,63 @@ class PlanContext:
         if remote is None:
             raise PlanError(f"remote target needs ctx.remote bound "
                             f"(no endpoint for {spec!r})")
-        # One transport per resolved endpoint: tuple addresses key by
-        # value (two specs pointing at the same server share one
-        # connection), handler objects by identity.
-        cache_key = (("addr", remote) if isinstance(remote, tuple)
-                     else ("obj", id(remote)))
+        return remote
+
+    def _endpoint_key(self, remote):
+        # Addresses key by value (two specs pointing at the same server
+        # share one connection), handler objects by identity.
+        if self._is_address(remote):
+            return ("addr", remote)
+        if isinstance(remote, (list, tuple)):
+            return ("hedged", tuple(self._endpoint_key(r) for r in remote))
+        return ("obj", id(remote))
+
+    def _single_transport(self, remote, ranking: bool):
+        if self._is_address(remote):
+            from repro.core.service import Client
+            client = Client(remote, retry_sheds=self.remote_retries,
+                            backoff_s=self.remote_backoff_s)
+            self._owned_clients.append(client)
+            return client
+        if ranking:
+            if hasattr(remote, "rank_batch"):
+                return remote
+            raise PlanError(f"remote_pipeline endpoint {remote!r} cannot "
+                            f"serve rankings (needs rank_batch — a server "
+                            f"address or a PipelineEngine)")
+        if hasattr(remote, "get_score_batch"):
+            return remote
+        if hasattr(remote, "get_scores"):
+            return _HandlerTransport(remote)
+        raise PlanError(f"unusable remote endpoint {remote!r}")
+
+    def _transport(self, remote, ranking: bool):
+        cache_key = (self._endpoint_key(remote), ranking)
         if cache_key not in self._transports:
-            if isinstance(remote, tuple):
-                from repro.core.service import Client
-                client = Client(remote, retry_sheds=self.remote_retries,
-                                backoff_s=self.remote_backoff_s)
-                self._owned_clients.append(client)
-                self._transports[cache_key] = client
-            elif hasattr(remote, "get_score_batch"):
-                self._transports[cache_key] = remote
-            elif hasattr(remote, "get_scores"):
-                self._transports[cache_key] = _HandlerTransport(remote)
+            if (isinstance(remote, (list, tuple))
+                    and not self._is_address(remote)):
+                from repro.serving.hedge import HedgedTransport
+                hedge_s = (self.hedge_ms / 1e3 if self.hedge_ms is not None
+                           else None)
+                self._transports[cache_key] = HedgedTransport(
+                    [self._single_transport(r, ranking) for r in remote],
+                    hedge_s=hedge_s)
             else:
-                raise PlanError(f"unusable remote endpoint {remote!r}")
+                self._transports[cache_key] = self._single_transport(
+                    remote, ranking)
         return self._transports[cache_key]
+
+    def transport_for(self, spec):
+        """The remote scoring endpoint for a rerank spec (see class doc)."""
+        return self._transport(self._resolve_remote(spec), ranking=False)
+
+    def ranking_transport(self):
+        """The whole-pipeline ranking endpoint (``remote_pipeline`` target):
+        anything with ``rank_batch(queries) -> rankings`` — a v3
+        ``service.Client`` (built lazily from an address), a
+        ``PipelineEngine``, or a hedged list of either."""
+        return self._transport(self._resolve_remote("default"),
+                               ranking=True)
 
     def close(self) -> None:
         """Close the ``service.Client`` connections this context opened
@@ -362,6 +438,14 @@ def _min_bound(bound: Optional[int], k: Optional[int]) -> Optional[int]:
     return k if bound is None else min(bound, k)
 
 
+def _retrieve_bound(op: "ops.Retrieve", ctx: PlanContext) -> Optional[int]:
+    """Candidate rows one query's Retrieve can produce: h docs x the widest
+    document's sentence count (None when no documents are bound). The single
+    source for both plan lowering and admission estimates."""
+    max_sents = max((len(d) for d in ctx.documents), default=0)
+    return op.h * max_sents if max_sents else None
+
+
 def _scorer_cap(bound: Optional[int], target: str,
                 ctx: PlanContext) -> Optional[int]:
     """k-pushdown: the scorer never sees more rows than the plan's candidate
@@ -374,6 +458,27 @@ def _scorer_cap(bound: Optional[int], target: str,
     return bound
 
 
+def candidate_bound(pipeline: ops.Op, ctx: PlanContext) -> Optional[int]:
+    """Upper bound on candidate rows ONE query pushes into the widest
+    rerank/fuse stage of ``pipeline``: retrieve depth x max sentences per
+    bound document, clipped by upstream cutoffs/k. This is the admission
+    row estimate a ``PipelineEngine`` reports per ranking query
+    (``rows_per_query``). ``None`` when no rerank work exists or no
+    documents are bound."""
+    bound: Optional[int] = None
+    peak: Optional[int] = None
+    for op in ops.normalize(pipeline).steps:
+        if isinstance(op, ops.Retrieve):
+            bound = _retrieve_bound(op, ctx)
+        elif isinstance(op, ops.Cutoff):
+            bound = _min_bound(bound, op.k)
+        elif isinstance(op, (ops.Rerank, ops.Fuse)):
+            if bound is not None:
+                peak = bound if peak is None else max(peak, bound)
+            bound = _min_bound(bound, op.k)
+    return peak
+
+
 def _rerank_name(spec, k: Optional[int], remote: bool) -> str:
     tag = spec if isinstance(spec, str) else getattr(spec, "name", "scorer")
     name = f"rerank-{tag}" + ("@remote" if remote else "")
@@ -384,6 +489,9 @@ def lower(pipeline: ops.Op, target: str, ctx: PlanContext) -> List[PL.Stage]:
     """Normalize + lower a pipeline description to a Stage cascade."""
     if target not in TARGETS:
         raise PlanError(f"unknown target {target!r}; one of {TARGETS}")
+    if target == "remote_pipeline":
+        raise PlanError("remote_pipeline has no local stage lowering — the "
+                        "server runs the cascade; build it with plan()")
     steps = ops.normalize(pipeline).steps
     if not steps:
         raise PlanError("empty pipeline")
@@ -399,8 +507,7 @@ def lower(pipeline: ops.Op, target: str, ctx: PlanContext) -> List[PL.Stage]:
             index = ctx.resolve_index(op.index)
             stages.append(PL.RetrievalStage(index, ctx.documents,
                                             ctx.tokenizer, h=op.h))
-            max_sents = max((len(d) for d in ctx.documents), default=0)
-            bound = op.h * max_sents if max_sents else None
+            bound = _retrieve_bound(op, ctx)
         elif isinstance(op, ops.Cutoff):
             stages.append(PL.TopKStage(op.k))
             bound = _min_bound(bound, op.k)
@@ -450,8 +557,14 @@ class ExecutionPlan:
              the coalesced cross-query schedule).
     remote   run is a sequential pass whose rerank stages RPC per query;
              run_many coalesces all queries' pairs per rerank stage.
-    Both engines return the same ``(candidates, trace)`` contract as the
-    legacy entry points.
+    remote_pipeline
+             the cascade runs server-side (wire v3 MSG_RANK_BATCH): run /
+             run_many send query strings — ONE RPC per query batch — and
+             rebuild candidates from the returned (doc_id, sent_id, score)
+             rankings using the context's bound documents.
+    All targets return the same ``(candidates, trace)`` contract as the
+    legacy entry points (the remote_pipeline trace is a single stage:
+    the server does not ship its per-stage accounting back).
     """
 
     def __init__(self, pipeline: ops.Op, target: str, stages: List[PL.Stage],
@@ -460,20 +573,63 @@ class ExecutionPlan:
         self.target = target
         self.stages = stages
         self.ctx = ctx
-        self._seq = PL.MultiStageRanker(stages)
-        self._bat = BatchedMultiStageRanker(stages, shared_cache=ctx.cache)
+        if target == "remote_pipeline":
+            self._ranker = ctx.ranking_transport()
+            self._seq = self._bat = None
+        else:
+            self._ranker = None
+            self._seq = PL.MultiStageRanker(stages)
+            self._bat = BatchedMultiStageRanker(stages,
+                                                shared_cache=ctx.cache)
+
+    def _sentence_text(self, doc_id: int, sent_id: int) -> str:
+        docs = self.ctx.documents
+        if 0 <= doc_id < len(docs) and 0 <= sent_id < len(docs[doc_id]):
+            return docs[doc_id][sent_id]
+        return ""    # ranking against a corpus this context doesn't bind
+
+    def _run_remote_pipeline(self, queries: Sequence[str]):
+        queries = list(queries)
+        chunk = self.ctx.rank_chunk or len(queries) or 1
+        t0 = time.perf_counter()
+        rankings: List = []
+        for i in range(0, len(queries), chunk):
+            rankings.extend(self._ranker.rank_batch(queries[i:i + chunk]))
+        if len(rankings) != len(queries):
+            raise ValueError(f"ranking reply held {len(rankings)} rankings "
+                             f"for {len(queries)} queries")
+        # Amortize the RPC wall time across the batch, matching the other
+        # targets' contract that per-query trace latencies sum to ~wall.
+        dt = (time.perf_counter() - t0) / max(len(queries), 1)
+        out = []
+        for ranking in rankings:
+            cands = [PL.Candidate(int(d), int(s),
+                                  self._sentence_text(int(d), int(s)),
+                                  float(score))
+                     for d, s, score in ranking]
+            out.append((cands, [PL.StageResult("pipeline@remote", cands,
+                                               dt)]))
+        return out
 
     def run(self, query: str):
+        if self.target == "remote_pipeline":
+            return self._run_remote_pipeline([query])[0]
         if self.target == "batched":
             return self._bat.run(query)
         return self._seq.run(query)
 
     def run_many(self, queries: Sequence[str]):
+        if self.target == "remote_pipeline":
+            return self._run_remote_pipeline(queries)
         if self.target == "local":
             return [self._seq.run(q) for q in queries]
         return self._bat.run_batch(queries)
 
     def describe(self) -> str:
+        if self.target == "remote_pipeline":
+            hedged = type(self._ranker).__name__ == "HedgedTransport"
+            return (f"{self.target}: rank-rpc[{self.pipeline!r}]"
+                    + ("[hedged]" if hedged else ""))
         parts = []
         for s in self.stages:
             extra = ""
@@ -509,6 +665,12 @@ def plan(pipeline: ops.Op, target: str = "local",
         ctx = PlanContext(**ctx_kw)
     elif ctx_kw:
         ctx = dataclasses.replace(ctx, **ctx_kw)
+    if target == "remote_pipeline":
+        # The server lowers and runs the cascade; locally there is nothing
+        # to lower — only the ranking endpoint to bind. Still validate the
+        # description so a malformed pipeline fails at plan time here too.
+        ops.normalize(pipeline)
+        return ExecutionPlan(pipeline, target, [], ctx)
     return ExecutionPlan(pipeline, target, lower(pipeline, target, ctx), ctx)
 
 

@@ -21,7 +21,7 @@ import queue
 import socket
 import threading
 import time
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,9 +59,15 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                       admission=None) -> None:
     """Request loop for one accepted connection, shared by both servers.
 
-    ``handler`` needs only ``get_scores(pairs) -> array``; with an
+    Pair-scoring requests need only ``get_scores(pairs) -> array`` on the
+    handler; v3 ranking requests (MSG_RANK / MSG_RANK_BATCH) dispatch to
+    ``rank_batch(queries) -> rankings`` and are answered with a clean
+    MSG_ERROR when the handler only scores pairs. With an
     ``AdmissionController`` attached, requests are admitted (or shed with a
-    MSG_SHED reply) before any scoring work starts.
+    MSG_SHED reply) before any scoring work starts; ranking requests are
+    sized for admission by the handler's per-query candidate-row estimate
+    (``rows_per_query``, e.g. retrieve depth x sentences per doc on
+    ``serving.engine.PipelineEngine``).
     """
     conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     conn.settimeout(CONN_TIMEOUT_S)
@@ -76,14 +82,37 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
             break              # trustworthy past this point — drop it
         if not t:
             break              # clean EOF
+        is_rank = t in (wire.MSG_RANK, wire.MSG_RANK_BATCH)
         try:
-            pairs, deadline_s = wire.decode_request_ex(t, payload)
+            if is_rank:
+                queries, deadline_s = wire.decode_rank_request(t, payload)
+                pairs = ()
+            else:
+                pairs, deadline_s = wire.decode_request_ex(t, payload)
         except Exception as e:  # noqa: BLE001 — malformed request
             try:
                 conn.sendall(wire.encode_error(str(e)))
             except OSError:
                 break
             continue
+        if is_rank and not hasattr(handler, "rank_batch"):
+            # v3 ranking request against a pair-scoring-only deployment:
+            # a typed protocol error, not a dropped connection.
+            try:
+                conn.sendall(wire.encode_error(
+                    "handler serves pair scoring only (no rank_batch); "
+                    "deploy a pipeline handler for MSG_RANK"))
+            except OSError:
+                break
+            continue
+        # Admission sizing: pair requests are their own row count; ranking
+        # requests expand server-side into up to rows_per_query candidate
+        # pairs per query.
+        if is_rank:
+            n_rows = len(queries) * max(
+                int(getattr(handler, "rows_per_query", 1)), 1)
+        else:
+            n_rows = len(pairs)
         # The wire deadline is a relative budget (no cross-host clock), so
         # the clock can only start when the frame is read: time spent in
         # the kernel/connection queues before this point must be burned
@@ -93,7 +122,7 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
         deadline_abs = (arrival + deadline_s if deadline_s is not None
                         else None)
         if admission is not None:
-            reason = admission.try_admit(len(pairs), deadline_abs,
+            reason = admission.try_admit(n_rows, deadline_abs,
                                          now=arrival)
             if reason is not None:
                 # Back-pressure sheds are retriable MSG_SHED; a request
@@ -102,7 +131,7 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                 # livelock on it.
                 if reason == SHED_TOO_LARGE:
                     frame = wire.encode_error(
-                        f"batch of {len(pairs)} rows exceeds admission "
+                        f"request of {n_rows} rows exceeds admission "
                         f"bound {admission.max_queue_rows}")
                 else:
                     frame = wire.encode_shed(reason)
@@ -117,15 +146,24 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                 # get the absolute deadline so their MicroBatcher can still
                 # drop the request at dequeue if it expires while queued —
                 # surfaced as a ShedError and answered with MSG_SHED below.
-                if getattr(handler, "supports_deadline", False):
-                    scores = handler.get_scores(pairs,
-                                                deadline_abs=deadline_abs)
+                wants_deadline = getattr(handler, "supports_deadline", False)
+                if is_rank:
+                    if wants_deadline:
+                        rankings = handler.rank_batch(
+                            queries, deadline_abs=deadline_abs)
+                    else:
+                        rankings = handler.rank_batch(queries)
+                    reply = wire.encode_reply_ranking(rankings)
                 else:
-                    scores = handler.get_scores(pairs)
-                reply = wire.encode_reply([float(s) for s in scores])
+                    if wants_deadline:
+                        scores = handler.get_scores(
+                            pairs, deadline_abs=deadline_abs)
+                    else:
+                        scores = handler.get_scores(pairs)
+                    reply = wire.encode_reply([float(s) for s in scores])
             finally:
                 if admission is not None:
-                    admission.release(len(pairs),
+                    admission.release(n_rows,
                                       time.perf_counter() - arrival)
             conn.sendall(reply)
         except OSError:
@@ -320,16 +358,16 @@ class Client:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def _roundtrip(self, frame: bytes):
+    def _roundtrip(self, frame: bytes, decode=wire.decode_reply):
         self._sock.sendall(frame)
         t, payload = wire.read_frame(self._sock)
         if not t:
             raise ConnectionError("server closed connection")
-        return wire.decode_reply(t, payload)
+        return decode(t, payload)
 
-    def _rpc(self, frame: bytes):
+    def _rpc(self, frame: bytes, decode=wire.decode_reply):
         try:
-            return self._roundtrip(frame)
+            return self._roundtrip(frame, decode)
         except (ConnectionError, OSError):
             if not self.reconnect:
                 raise
@@ -338,13 +376,13 @@ class Client:
             except OSError:
                 pass
             self._sock = self._connect()
-            return self._roundtrip(frame)
+            return self._roundtrip(frame, decode)
 
-    def _rpc_with_retry(self, frame: bytes):
+    def _rpc_with_retry(self, frame: bytes, decode=wire.decode_reply):
         attempt = 0
         while True:
             try:
-                return self._rpc(frame)
+                return self._rpc(frame, decode)
             except wire.ShedError:
                 if attempt >= self.retry_sheds:
                     raise  # budget spent: overload surfaces to the caller
@@ -362,6 +400,25 @@ class Client:
                         deadline_s: Optional[float] = None):
         return self._rpc_with_retry(
             wire.encode_get_score_batch(pairs, deadline_s))
+
+    def rank(self, query: str, deadline_s: Optional[float] = None
+             ) -> List[wire.RankedItem]:
+        """v3 whole-pipeline ranking: one query in, one ranked
+        (doc_id, sent_id, score) list out."""
+        out = self._rpc_with_retry(wire.encode_rank(query, deadline_s),
+                                   wire.decode_reply_ranking)
+        if not out:     # a misbehaving server must fail typed, not crash
+            raise ValueError("ranking reply held no rankings for the query")
+        return out[0]
+
+    def rank_batch(self, queries: Sequence[str],
+                   deadline_s: Optional[float] = None
+                   ) -> List[List[wire.RankedItem]]:
+        """v3 whole-pipeline ranking for a query batch — ONE RPC for the
+        whole batch instead of chunked per-pair scoring calls."""
+        return self._rpc_with_retry(
+            wire.encode_rank_batch(queries, deadline_s),
+            wire.decode_reply_ranking)
 
     def close(self):
         self._sock.close()

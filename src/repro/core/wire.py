@@ -1,10 +1,14 @@
 """Compact binary wire protocol — the paper's Thrift IDL analogue.
 
-IDL (mirrors Figure 2 of the paper):
+IDL (mirrors Figure 2 of the paper; v3 grows it past pair scoring to
+whole-pipeline ranking):
 
   service QuestionAnswering {
     double getScore(1: string question, 2: string answer)
     list<double> getScoreBatch(1: list<Pair> pairs)
+    // v3: serve a composed multi-stage pipeline behind one RPC
+    list<Ranked> rank(1: string query)
+    list<list<Ranked>> rankBatch(1: list<string> queries)
   }
 
 Frame: u32 payload_len | u8 msg_type | payload. Strings are u32-len-prefixed
@@ -19,10 +23,22 @@ Version history:
        seconds (relative to send time, so no cross-host clock is assumed).
        Servers answering past-deadline or over-capacity requests reply with
        MSG_SHED instead of queueing unboundedly.
+  v3 — same header as v2; adds ranking messages so one RPC serves a whole
+       multi-stage cascade (query strings in, ranked lists out) instead of
+       shipping every candidate pair over the wire:
+         MSG_RANK           query:str                  -> MSG_REPLY_RANKING
+         MSG_RANK_BATCH     u32 n | n x query:str      -> MSG_REPLY_RANKING
+         MSG_REPLY_RANKING  u32 n_queries | per query: u32 n_items |
+                            n_items x (i32 doc_id, i32 sent_id, f64 score)
+       The deadline flag is preserved (identical header layout). v1/v2
+       pair-scoring frames keep decoding on a v3 server; a v3 ranking
+       request against a server whose handler only scores pairs gets a
+       clean MSG_ERROR reply (see core.service dispatch).
 
-Both versions decode on a v2 server; a v1 client never sees MSG_SHED for
-its own requests unless the server queue is full (deadline-based shedding
-needs the v2 deadline field).
+Malformed input: every decoder raises ``ValueError`` with byte-offset
+context on truncated or hostile payloads — never a bare ``IndexError`` or
+``struct.error`` — so servers answer with a typed protocol error (MSG_ERROR)
+and clients surface a diagnosable message instead of a parser traceback.
 """
 from __future__ import annotations
 
@@ -30,15 +46,23 @@ import socket
 import struct
 from typing import List, Optional, Sequence, Tuple
 
-VERSION = 2
+VERSION = 3
 MIN_VERSION = 1
 FLAG_DEADLINE = 1
 MSG_GET_SCORE = 1
 MSG_GET_SCORE_BATCH = 2
+MSG_RANK = 3
+MSG_RANK_BATCH = 4
 MSG_REPLY_SCORE = 101
 MSG_REPLY_SCORES = 102
+MSG_REPLY_RANKING = 103
 MSG_SHED = 254
 MSG_ERROR = 255
+
+#: One ranked result: (doc_id, sent_id, score).
+RankedItem = Tuple[int, int, float]
+_RANKED_FMT = "<iid"
+_RANKED_SIZE = struct.calcsize(_RANKED_FMT)  # 16 bytes
 
 #: Upper bound on a frame payload; a corrupt or hostile length prefix must
 #: not make the server try to buffer gigabytes.
@@ -54,17 +78,59 @@ def _pack_str(s: str) -> bytes:
     return struct.pack("<I", len(b)) + b
 
 
+def _unpack_from(fmt: str, buf, off: int) -> tuple:
+    """``struct.unpack_from`` that reports truncation as ``ValueError`` with
+    byte-offset context instead of leaking ``struct.error``."""
+    try:
+        return struct.unpack_from(fmt, buf, off)
+    except struct.error:
+        raise ValueError(
+            f"truncated payload: need {struct.calcsize(fmt)} bytes at "
+            f"offset {off}, have {max(len(buf) - off, 0)}") from None
+
+
 def _unpack_str(buf: memoryview, off: int) -> Tuple[str, int]:
-    (n,) = struct.unpack_from("<I", buf, off)
+    (n,) = _unpack_from("<I", buf, off)
     if off + 4 + n > len(buf):
         raise ValueError(f"truncated string: need {n} bytes at offset {off}")
     return bytes(buf[off + 4:off + 4 + n]).decode(), off + 4 + n
+
+
+def _check_count(n: int, remaining: int, min_bytes: int, what: str) -> None:
+    """A hostile element count must fail fast, not drive a 4-billion-round
+    decode loop: every element needs at least ``min_bytes`` of payload."""
+    if n * min_bytes > remaining:
+        raise ValueError(f"{what} count {n} exceeds payload "
+                         f"({remaining} bytes remaining)")
 
 
 def _request_header(deadline_s: Optional[float]) -> bytes:
     if deadline_s is None:
         return bytes([VERSION, 0])
     return bytes([VERSION, FLAG_DEADLINE]) + struct.pack("<d", deadline_s)
+
+
+def _decode_header(buf: memoryview) -> Tuple[Optional[float], int]:
+    """Version/flags/deadline prefix shared by every request decoder.
+    Returns (deadline_s or None, body offset)."""
+    if len(buf) == 0:
+        raise ValueError("empty request payload (version byte missing at "
+                         "offset 0)")
+    ver = buf[0]
+    if not MIN_VERSION <= ver <= VERSION:
+        raise ValueError(f"wire version {ver} outside "
+                         f"[{MIN_VERSION}, {VERSION}]")
+    if ver == 1:
+        return None, 1
+    if len(buf) < 2:
+        raise ValueError("truncated header: flags byte missing at offset 1")
+    flags = buf[1]
+    off = 2
+    deadline_s: Optional[float] = None
+    if flags & FLAG_DEADLINE:
+        (deadline_s,) = _unpack_from("<d", buf, off)
+        off += 8
+    return deadline_s, off
 
 
 def encode_get_score(question: str, answer: str,
@@ -82,12 +148,38 @@ def encode_get_score_batch(pairs: Sequence[Tuple[str, str]],
     return struct.pack("<IB", len(payload), MSG_GET_SCORE_BATCH) + payload
 
 
+def encode_rank(query: str, deadline_s: Optional[float] = None) -> bytes:
+    payload = _request_header(deadline_s) + _pack_str(query)
+    return struct.pack("<IB", len(payload), MSG_RANK) + payload
+
+
+def encode_rank_batch(queries: Sequence[str],
+                      deadline_s: Optional[float] = None) -> bytes:
+    payload = _request_header(deadline_s) + struct.pack("<I", len(queries))
+    for q in queries:
+        payload += _pack_str(q)
+    return struct.pack("<IB", len(payload), MSG_RANK_BATCH) + payload
+
+
 def encode_reply(scores: Sequence[float]) -> bytes:
     if len(scores) == 1:
         payload = struct.pack("<d", scores[0])
         return struct.pack("<IB", len(payload), MSG_REPLY_SCORE) + payload
     payload = struct.pack("<I", len(scores)) + struct.pack(f"<{len(scores)}d", *scores)
     return struct.pack("<IB", len(payload), MSG_REPLY_SCORES) + payload
+
+
+def encode_reply_ranking(
+        rankings: Sequence[Sequence[RankedItem]]) -> bytes:
+    """One ranked (doc_id, sent_id, score) list per query."""
+    parts = [struct.pack("<I", len(rankings))]
+    for items in rankings:
+        parts.append(struct.pack("<I", len(items)))
+        for doc_id, sent_id, score in items:
+            parts.append(struct.pack(_RANKED_FMT, int(doc_id), int(sent_id),
+                                     float(score)))
+    payload = b"".join(parts)
+    return struct.pack("<IB", len(payload), MSG_REPLY_RANKING) + payload
 
 
 def encode_error(msg: str) -> bytes:
@@ -141,28 +233,18 @@ def _read_exact(sock: socket.socket, n: int) -> bytes:
 
 def decode_request_ex(msg_type: int, payload: bytes
                       ) -> Tuple[List[Tuple[str, str]], Optional[float]]:
-    """Decode a request frame into (pairs, deadline_s or None)."""
+    """Decode a pair-scoring request frame into (pairs, deadline_s or
+    None)."""
     buf = memoryview(payload)
-    ver = buf[0]
-    if not MIN_VERSION <= ver <= VERSION:
-        raise ValueError(f"wire version {ver} outside "
-                         f"[{MIN_VERSION}, {VERSION}]")
-    deadline_s: Optional[float] = None
-    if ver == 1:
-        off = 1
-    else:
-        flags = buf[1]
-        off = 2
-        if flags & FLAG_DEADLINE:
-            (deadline_s,) = struct.unpack_from("<d", buf, off)
-            off += 8
+    deadline_s, off = _decode_header(buf)
     if msg_type == MSG_GET_SCORE:
         q, off = _unpack_str(buf, off)
         a, off = _unpack_str(buf, off)
         return [(q, a)], deadline_s
     if msg_type == MSG_GET_SCORE_BATCH:
-        (n,) = struct.unpack_from("<I", buf, off)
+        (n,) = _unpack_from("<I", buf, off)
         off += 4
+        _check_count(n, len(buf) - off, 8, "pair")
         pairs = []
         for _ in range(n):
             q, off = _unpack_str(buf, off)
@@ -176,14 +258,69 @@ def decode_request(msg_type: int, payload: bytes) -> List[Tuple[str, str]]:
     return decode_request_ex(msg_type, payload)[0]
 
 
+def decode_rank_request(msg_type: int, payload: bytes
+                        ) -> Tuple[List[str], Optional[float]]:
+    """Decode a v3 ranking request frame into (queries, deadline_s or
+    None)."""
+    buf = memoryview(payload)
+    deadline_s, off = _decode_header(buf)
+    if msg_type == MSG_RANK:
+        q, off = _unpack_str(buf, off)
+        return [q], deadline_s
+    if msg_type == MSG_RANK_BATCH:
+        (n,) = _unpack_from("<I", buf, off)
+        off += 4
+        _check_count(n, len(buf) - off, 4, "query")
+        queries = []
+        for _ in range(n):
+            q, off = _unpack_str(buf, off)
+            queries.append(q)
+        return queries, deadline_s
+    raise ValueError(f"unknown ranking msg type {msg_type}")
+
+
+def _reply_text(payload: bytes) -> str:
+    return _unpack_str(memoryview(payload), 0)[0]
+
+
 def decode_reply(msg_type: int, payload: bytes) -> List[float]:
     if msg_type == MSG_REPLY_SCORE:
-        return [struct.unpack("<d", payload)[0]]
+        return [_unpack_from("<d", payload, 0)[0]]
     if msg_type == MSG_REPLY_SCORES:
-        (n,) = struct.unpack_from("<I", payload, 0)
-        return list(struct.unpack_from(f"<{n}d", payload, 4))
+        buf = memoryview(payload)
+        (n,) = _unpack_from("<I", buf, 0)
+        _check_count(n, len(buf) - 4, 8, "score")
+        return list(_unpack_from(f"<{n}d", buf, 4))
     if msg_type == MSG_SHED:
-        raise ShedError(f"request shed: {payload[4:].decode()}")
+        raise ShedError(f"request shed: {_reply_text(payload)}")
     if msg_type == MSG_ERROR:
-        raise RuntimeError(f"server error: {payload[4:].decode()}")
+        raise RuntimeError(f"server error: {_reply_text(payload)}")
     raise ValueError(f"unknown reply type {msg_type}")
+
+
+def decode_reply_ranking(msg_type: int, payload: bytes
+                         ) -> List[List[RankedItem]]:
+    """Decode a MSG_REPLY_RANKING frame (shed/error frames raise exactly
+    like ``decode_reply``)."""
+    if msg_type == MSG_SHED:
+        raise ShedError(f"request shed: {_reply_text(payload)}")
+    if msg_type == MSG_ERROR:
+        raise RuntimeError(f"server error: {_reply_text(payload)}")
+    if msg_type != MSG_REPLY_RANKING:
+        raise ValueError(f"unknown ranking reply type {msg_type}")
+    buf = memoryview(payload)
+    (n_queries,) = _unpack_from("<I", buf, 0)
+    off = 4
+    _check_count(n_queries, len(buf) - off, 4, "ranking")
+    out: List[List[RankedItem]] = []
+    for _ in range(n_queries):
+        (n_items,) = _unpack_from("<I", buf, off)
+        off += 4
+        _check_count(n_items, len(buf) - off, _RANKED_SIZE, "ranked item")
+        items: List[RankedItem] = []
+        for _ in range(n_items):
+            doc_id, sent_id, score = _unpack_from(_RANKED_FMT, buf, off)
+            off += _RANKED_SIZE
+            items.append((doc_id, sent_id, score))
+        out.append(items)
+    return out

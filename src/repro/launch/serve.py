@@ -11,8 +11,16 @@
   # print how the canonical ranking pipeline lowers to each execution plan
   PYTHONPATH=src python -m repro.launch.serve --describe
 
+  # serve the WHOLE multi-stage pipeline behind one RPC (wire v3
+  # MSG_RANK / MSG_RANK_BATCH; drive with Client.rank / rank_batch or a
+  # plan(pipeline, "remote_pipeline", ctx) on the client side)
+  PYTHONPATH=src python -m repro.launch.serve --serve-pipeline \
+      --server threadpool --backend jit --port 9090
+
   (then drive it with repro.core.service.Client, benchmarks/loadgen.py,
-  or examples/serve_pipeline.py)
+  or examples/serve_pipeline.py; --hedge-ms sets the fixed hedge delay
+  clients of THIS process's plans use when ctx.remote lists several
+  endpoints — 0 keeps the adaptive p95 delay)
 
 Single-server scorer construction routes through the declarative pipeline
 API's ``PlanContext`` (repro.core.plan), the same factory the planner and
@@ -32,11 +40,39 @@ from repro.serving.admission import AdmissionController
 from repro.serving.cluster import POLICIES, ReplicaPool
 
 
-def build_server(args, cfg, params, corpus, tok, ctx=None):
+def canonical_pipeline(backend: str):
+    """The demo cascade every launcher entry point serves/describes."""
+    return (ops.Retrieve(h=10) >> ops.DynamicCutoff(margin=3.0)
+            >> ops.Rerank(backend, k=3))
+
+
+def build_server(args, cfg, params, corpus, tok, index=None, ctx=None):
     """Build (server, pool-or-None) from parsed CLI args."""
     if ctx is None:
-        ctx = PlanContext.from_world(cfg, params, corpus, tok, index=None,
-                                     buckets=(1, 8, 64, 256))
+        ctx = PlanContext.from_world(cfg, params, corpus, tok, index=index,
+                                     buckets=(1, 8, 64, 256),
+                                     hedge_ms=getattr(args, "hedge_ms",
+                                                      None))
+    if getattr(args, "serve_pipeline", False):
+        # Whole-pipeline ranking service (wire v3): the handler lowers the
+        # canonical pipeline server-side and answers MSG_RANK_BATCH with
+        # ranked lists — one RPC per query batch instead of pair scoring.
+        from repro.serving.engine import PipelineEngine
+        engine = PipelineEngine(canonical_pipeline(args.backend), ctx,
+                                target="batched")
+        if args.server == "simple":
+            return SV.SimpleServer(engine, host=args.host,
+                                   port=args.port), None
+        # Ranking requests are sized at len(queries) x rows_per_query, so
+        # the bound must cover a realistic query batch (one plan.run_many
+        # is ONE RPC) — auto-raise to a 32-query batch; clients driving
+        # bigger batches chunk with PlanContext.rank_chunk.
+        admission = (AdmissionController(max_queue_rows=max(
+                         args.max_queue, engine.rows_per_query * 32))
+                     if args.max_queue > 0 else None)
+        return SV.ThreadPoolServer(engine, host=args.host, port=args.port,
+                                   num_workers=args.workers,
+                                   admission=admission), None
     if args.server == "simple":
         scorer = ctx.scorer_for(args.backend)
         handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
@@ -59,15 +95,18 @@ class _Unconnected:
     def get_score_batch(self, pairs):
         raise RuntimeError("no server connected (--describe only lowers)")
 
+    def rank_batch(self, queries):
+        raise RuntimeError("no server connected (--describe only lowers)")
+
 
 def describe_plans(args, cfg, params, corpus, tok, index) -> str:
-    """The canonical pipeline, lowered to all three execution targets."""
-    pipeline = (ops.Retrieve(h=10) >> ops.DynamicCutoff(margin=3.0)
-                >> ops.Rerank(args.backend, k=3))
+    """The canonical pipeline, lowered to every execution target."""
+    pipeline = canonical_pipeline(args.backend)
     ctx = PlanContext.from_world(cfg, params, corpus, tok, index,
-                                 remote=_Unconnected())
+                                 remote=_Unconnected(),
+                                 hedge_ms=getattr(args, "hedge_ms", None))
     lines = [f"pipeline: {pipeline!r}"]
-    for target in ("local", "batched", "remote"):
+    for target in ("local", "batched", "remote", "remote_pipeline"):
         lines.append("  " + plan(pipeline, target, ctx).describe())
     return "\n".join(lines)
 
@@ -92,18 +131,28 @@ def main():
     ap.add_argument("--workers", type=int, default=8,
                     help="threadpool connection workers")
     ap.add_argument("--describe", action="store_true",
-                    help="print the canonical pipeline lowered to the "
-                         "local/batched/remote execution plans, then exit")
+                    help="print the canonical pipeline lowered to every "
+                         "execution plan, then exit")
+    ap.add_argument("--serve-pipeline", action="store_true",
+                    help="serve the WHOLE canonical multi-stage pipeline "
+                         "behind wire v3 ranking RPCs (MSG_RANK / "
+                         "MSG_RANK_BATCH) instead of pair scoring")
+    ap.add_argument("--hedge-ms", type=float, default=None,
+                    help="fixed hedge delay (ms) for plans whose "
+                         "ctx.remote lists several endpoints; default "
+                         "adapts to the observed p95")
     args = ap.parse_args()
 
     cfg, params, corpus, tok, index, _ = build_world(args.train_steps)
     if args.describe:
         print(describe_plans(args, cfg, params, corpus, tok, index))
         return
-    srv, pool = build_server(args, cfg, params, corpus, tok)
+    srv, pool = build_server(args, cfg, params, corpus, tok, index=index)
     mode = (f"{args.server}" if args.server == "simple" else
             f"{args.server} x{args.replicas} {args.policy} "
             f"max_queue={args.max_queue}")
+    if args.serve_pipeline:
+        mode += " serve-pipeline(rank-rpc)"
     print(f"serving QuestionAnswering ({args.backend}, {mode}) "
           f"on {srv.address}")
     try:

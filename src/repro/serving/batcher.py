@@ -79,10 +79,13 @@ class MicroBatcher:
         self._rows_scored = 0
         self._rows_shed = 0
         self._row_scorer_s: Optional[float] = None
+        self._n_batches = 0   # monotonic, all-time (stats "batches")
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._running = True
         self._thread.start()
         # Sliding window: bounds memory over a long-running server's life.
+        # Only "mean_batch" is derived from it; the batch COUNT is the
+        # monotonic _n_batches counter, so it doesn't plateau at maxlen.
         self.batch_sizes: "deque[int]" = deque(maxlen=4096)
 
     @property
@@ -197,6 +200,7 @@ class MicroBatcher:
                         else self._row_scorer_s
                         + 0.2 * (per_row - self._row_scorer_s))
                     self._rows_scored += int(q.shape[0])
+                    self._n_batches += 1
                     self.batch_sizes.append(int(q.shape[0]))
                 offset = 0
                 for i in items:
@@ -212,13 +216,16 @@ class MicroBatcher:
     def stats(self) -> dict:
         with self._lock:
             rows, out = self._rows_scored, self._outstanding_rows
-            shed = self._rows_shed
+            shed, batches = self._rows_shed, self._n_batches
             sizes = list(self.batch_sizes)  # snapshot: worker appends
         return {
             "rows_scored": float(rows),
             "rows_shed": float(shed),
             "outstanding_rows": float(out),
-            "batches": float(len(sizes)),
+            # All-time count; "mean_batch" stays a sliding-window mean over
+            # the most recent maxlen batches (recent behavior, bounded
+            # memory) — the two deliberately cover different horizons.
+            "batches": float(batches),
             "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
         }
 

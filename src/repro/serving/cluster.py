@@ -137,8 +137,12 @@ class ReplicaPool:
         self.tracker.observe(time.perf_counter() - t0, n=len(pairs))
         return out
 
-    def get_score(self, question: str, answer: str) -> float:
-        return float(self.get_scores([(question, answer)])[0])
+    def get_score(self, question: str, answer: str,
+                  deadline_abs: Optional[float] = None) -> float:
+        """Single-pair twin of ``get_scores`` with the same deadline
+        semantics (expired-on-arrival shed + dequeue drop)."""
+        return float(self.get_scores([(question, answer)],
+                                     deadline_abs=deadline_abs)[0])
 
     def outstanding_rows(self) -> int:
         return sum(r.outstanding_rows for r in self.replicas)

@@ -48,9 +48,16 @@ class ServingEngine:
     def _featurize(self, question: str, answer: str):
         return self.features.featurize(question, answer)
 
-    def get_score(self, question: str, answer: str) -> float:
+    def get_score(self, question: str, answer: str,
+                  deadline_abs: Optional[float] = None) -> float:
+        """Single-pair twin of ``get_scores``: the deadline propagates the
+        same way (shed before featurization if already expired, dropped at
+        the batcher dequeue if it expires while queued)."""
+        if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
-        fut = self.batcher.submit(*self._featurize(question, answer))
+        fut = self.batcher.submit(*self._featurize(question, answer),
+                                  deadline_abs=deadline_abs)
         out = fut.result()
         self.tracker.observe(time.perf_counter() - t0)
         return out
@@ -94,13 +101,28 @@ class PipelineEngine:
     description is the single source of truth: the same ``pipeline`` value
     a notebook runs locally is the one the cluster serves batched or
     remote.
+
+    It is also a drop-in handler for ``core.service`` servers on the v3
+    ranking messages: ``rank_batch`` answers MSG_RANK / MSG_RANK_BATCH with
+    wire-level ``(doc_id, sent_id, score)`` rankings, ``supports_deadline``
+    sheds expired-on-arrival requests before any retrieval work, and
+    ``rows_per_query`` (retrieve depth x max sentences per doc, clipped by
+    the pipeline's cutoffs) sizes ranking requests for admission control.
     """
 
+    #: core.service passes the decoded wire deadline into ``rank_batch`` so
+    #: requests already past their budget shed before stage 1 runs.
+    supports_deadline = True
+
     def __init__(self, pipeline, ctx, target: str = "batched"):
-        from repro.core.plan import plan as _plan
+        from repro.core.plan import candidate_bound, plan as _plan
         self.pipeline = pipeline
         self.plan = _plan(pipeline, target, ctx)
         self.tracker = LatencyTracker()
+        #: Admission row estimate for one ranking query: the planner's
+        #: candidate bound on the widest rerank stage (never below 1 so a
+        #: rerank-free pipeline still counts each query).
+        self.rows_per_query = max(candidate_bound(pipeline, ctx) or 1, 1)
 
     def rank(self, query: str):
         t0 = time.perf_counter()
@@ -115,10 +137,26 @@ class PipelineEngine:
                              n=max(len(queries), 1))
         return out
 
+    def rank_batch(self, queries: Sequence[str],
+                   deadline_abs: Optional[float] = None):
+        """Wire-level handler entry point (MSG_RANK / MSG_RANK_BATCH): one
+        ranked ``(doc_id, sent_id, score)`` list per query. Raises
+        ``wire.ShedError`` when the request is already past its deadline —
+        the whole cascade would otherwise run for an answer nobody waits
+        for."""
+        if not queries:
+            return []
+        if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            raise ShedError(SHED_EXPIRED)
+        results = self.rank_many(list(queries))
+        return [[(c.doc_id, c.sent_id, c.score) for c in cands]
+                for cands, _trace in results]
+
     def describe(self) -> str:
         return self.plan.describe()
 
     def stats(self) -> Dict[str, float]:
         s = self.tracker.summary()
         s.update(self.plan.cache_stats())
+        s["rows_per_query"] = float(self.rows_per_query)
         return s

@@ -56,6 +56,27 @@ def test_threadpool_at_least_2x_simple_at_4_clients():
     assert r_tp["p99_ms"] < 1000.0
 
 
+class RankHandler:
+    """Stub v3 ranking handler: fixed rankings, no pipeline."""
+
+    rows_per_query = 4
+
+    def rank_batch(self, queries):
+        return [[(0, 0, 1.0), (1, 0, 0.5)] for _ in queries]
+
+
+def test_rank_mode_open_loop_level():
+    """run_level(mode="rank") drives whole-pipeline ranking RPCs: every
+    scheduled arrival is one Client.rank call, errors stay zero."""
+    srv = SV.ThreadPoolServer(RankHandler(),
+                              num_workers=4).start_background()
+    r = run_level(srv.address, [f"query {i}" for i in range(8)],
+                  offered_qps=100.0, duration_s=0.8, n_conns=2, mode="rank")
+    srv.stop()
+    assert r["n_error"] == 0
+    assert r["n_ok"] > 0
+
+
 def test_overload_sheds_instead_of_queueing():
     """Offered >> capacity with a tight deadline: requests get SHED replies
     (fast-failing) rather than piling onto an unbounded queue."""

@@ -242,6 +242,83 @@ def test_remote_fuse_per_backend_endpoints(world):
     verify_plans([local, remote], corpus.questions[:8])
 
 
+def test_remote_pipeline_plan_equivalence(world):
+    """remote_pipeline: the whole cascade runs server-side behind one v3
+    ranking RPC per query batch; rankings must match local/batched."""
+    cfg, params, corpus, tok, index = world
+    from repro.serving.engine import PipelineEngine
+    ctx = _ctx(world)
+    p = ops.Retrieve(h=8) >> ops.Rerank("jit", k=5)
+    engine = PipelineEngine(p, _ctx(world), target="batched")
+    srv = SV.ThreadPoolServer(engine).start_background()
+    plans = []
+    try:
+        plans = [plan(p, "local", ctx),
+                 plan(p, "batched", ctx),
+                 plan(p, "remote_pipeline", ctx=ctx,
+                      remote=srv.address)]
+        verify_plans(plans, corpus.questions[:10])
+        # candidate text is rebuilt from the context's bound documents
+        cands, trace = plans[2].run(corpus.questions[0])
+        assert all(c.text == corpus.documents[c.doc_id][c.sent_id]
+                   for c in cands)
+        assert [t.name for t in trace] == ["pipeline@remote"]
+    finally:
+        for pl_ in plans:
+            pl_.close()
+        srv.stop()
+
+
+def test_remote_pipeline_in_process_engine(world):
+    """ctx.remote can be a PipelineEngine directly (no sockets) — and the
+    admission row estimate reflects the pipeline's candidate bound."""
+    cfg, params, corpus, tok, index = world
+    from repro.serving.engine import PipelineEngine
+    ctx = _ctx(world)
+    p = ops.Retrieve(h=4) >> ops.Cutoff(6) >> ops.Rerank("numpy", k=3)
+    engine = PipelineEngine(p, _ctx(world), target="batched")
+    assert engine.rows_per_query == 6       # cutoff clips retrieve x sents
+    verify_plans([plan(p, "local", ctx),
+                  plan(p, "remote_pipeline", ctx=ctx, remote=engine)],
+                 corpus.questions[:8])
+
+
+def test_remote_pipeline_rank_chunk_bounds_rpc_size(world):
+    """ctx.rank_chunk splits a big query batch into bounded ranking RPCs
+    (for servers whose admission bound can't cover the whole batch)."""
+    cfg, params, corpus, tok, index = world
+    from repro.serving.engine import PipelineEngine
+    ctx = _ctx(world)
+    p = ops.Retrieve(h=4) >> ops.Rerank("numpy", k=3)
+    engine = PipelineEngine(p, _ctx(world), target="batched")
+    calls = []
+
+    class Recorder:
+        def rank_batch(self, queries):
+            calls.append(len(queries))
+            return engine.rank_batch(queries)
+
+    rp = plan(p, "remote_pipeline", ctx=ctx, remote=Recorder(),
+              rank_chunk=3)
+    out = rp.run_many(corpus.questions[:8])
+    assert len(out) == 8
+    assert calls == [3, 3, 2]
+    # per-query trace latency is amortized, not the full batch wall time
+    total = sum(trace[0].latency_s for _, trace in out)
+    assert total == pytest.approx(8 * out[0][1][0].latency_s)
+
+
+def test_remote_pipeline_needs_ranking_endpoint(world):
+    """A pair-scoring-only endpoint cannot back a remote_pipeline plan."""
+    cfg, params, corpus, tok, index = world
+    ctx = _ctx(world)
+    handler = SV.QuestionAnsweringHandler(ctx.scorer_for("numpy", 200), tok,
+                                          corpus.idf, cfg.max_len)
+    p = ops.Retrieve(h=4) >> ops.Rerank("numpy", k=3)
+    with pytest.raises(PlanError, match="rank_batch"):
+        plan(p, "remote_pipeline", ctx=ctx, remote=handler)
+
+
 def test_plan_run_and_trace_contract(world):
     """Plans keep the (candidates, trace) contract of the legacy rankers."""
     cfg, params, corpus, tok, index = world

@@ -1,5 +1,6 @@
 """Wire protocol edge cases: truncation, hostile lengths, unknown types,
-error/shed frames, and cross-version compatibility of the deadline field."""
+error/shed frames, cross-version compatibility of the deadline field, and
+the v3 ranking messages (MSG_RANK / MSG_RANK_BATCH / MSG_REPLY_RANKING)."""
 import socket
 import struct
 
@@ -179,3 +180,161 @@ def test_decode_request_back_compat_helper():
     assert wire.decode_request(t, payload) == [("q", "a")]
     t, payload = _frame_parts(_v1_get_score_frame("q", "a"))
     assert wire.decode_request(t, payload) == [("q", "a")]
+
+
+def _v2_get_score_frame(q: str, a: str, deadline_s=None) -> bytes:
+    """Hand-rolled version-2 frame (what a pre-ranking client sends)."""
+    head = (bytes([2, 0]) if deadline_s is None
+            else bytes([2, wire.FLAG_DEADLINE]) + struct.pack("<d",
+                                                              deadline_s))
+    payload = head + wire._pack_str(q) + wire._pack_str(a)
+    return struct.pack("<IB", len(payload), wire.MSG_GET_SCORE) + payload
+
+
+def test_v2_frame_decodes_on_v3_server():
+    t, payload = _frame_parts(_v2_get_score_frame("v2 q", "v2 a",
+                                                  deadline_s=0.5))
+    pairs, deadline = wire.decode_request_ex(t, payload)
+    assert pairs == [("v2 q", "v2 a")] and deadline == 0.5
+    t, payload = _frame_parts(_v2_get_score_frame("v2 q", "v2 a"))
+    assert wire.decode_request_ex(t, payload) == ([("v2 q", "v2 a")], None)
+
+
+# ------------------------------------------------------- v3 ranking messages
+
+def test_rank_request_roundtrip():
+    t, payload = _frame_parts(wire.encode_rank("who wrote it"))
+    assert t == wire.MSG_RANK
+    queries, deadline = wire.decode_rank_request(t, payload)
+    assert queries == ["who wrote it"] and deadline is None
+    t, payload = _frame_parts(wire.encode_rank("q", deadline_s=0.25))
+    assert wire.decode_rank_request(t, payload) == (["q"], 0.25)
+
+
+def test_rank_batch_request_roundtrip():
+    qs = [f"query {i}" for i in range(5)] + [""]
+    t, payload = _frame_parts(wire.encode_rank_batch(qs, deadline_s=1.5))
+    assert t == wire.MSG_RANK_BATCH
+    assert wire.decode_rank_request(t, payload) == (qs, 1.5)
+
+
+def test_reply_ranking_roundtrip():
+    rankings = [[(3, 0, 1.5), (7, 2, -0.25)], [], [(0, 0, 0.0)]]
+    t, payload = _frame_parts(wire.encode_reply_ranking(rankings))
+    assert t == wire.MSG_REPLY_RANKING
+    assert wire.decode_reply_ranking(t, payload) == rankings
+    # empty batch reply
+    t, payload = _frame_parts(wire.encode_reply_ranking([]))
+    assert wire.decode_reply_ranking(t, payload) == []
+
+
+def test_reply_ranking_shed_and_error_raise_like_scores():
+    t, payload = _frame_parts(wire.encode_shed("expired"))
+    with pytest.raises(wire.ShedError, match="expired"):
+        wire.decode_reply_ranking(t, payload)
+    t, payload = _frame_parts(wire.encode_error("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        wire.decode_reply_ranking(t, payload)
+    with pytest.raises(ValueError, match="unknown ranking reply"):
+        wire.decode_reply_ranking(wire.MSG_REPLY_SCORE, b"\x00" * 8)
+
+
+def test_rank_request_wrong_type_raises():
+    t, payload = _frame_parts(wire.encode_get_score("q", "a"))
+    with pytest.raises(ValueError, match="unknown ranking msg type"):
+        wire.decode_rank_request(wire.MSG_GET_SCORE, payload)
+
+
+def test_rank_against_pair_scoring_only_server_gets_msg_error():
+    """A v3 ranking request against a pair-scoring-only deployment must be
+    answered with a clean MSG_ERROR, not a dropped connection."""
+    from repro.core import service as SV
+
+    class PairsOnly:
+        def get_scores(self, pairs):
+            return [0.5] * len(pairs)
+
+    srv = SV.SimpleServer(PairsOnly()).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            with pytest.raises(RuntimeError, match="pair scoring only"):
+                cl.rank("who?")
+            # the connection survives the protocol error
+            assert cl.get_score("q", "a") == pytest.approx(0.5)
+    finally:
+        srv.stop()
+
+
+# --------------------------------------------- malformed payloads -> ValueError
+
+def test_empty_request_payload_raises_value_error():
+    with pytest.raises(ValueError, match="empty request payload"):
+        wire.decode_request_ex(wire.MSG_GET_SCORE, b"")
+    with pytest.raises(ValueError, match="empty request payload"):
+        wire.decode_rank_request(wire.MSG_RANK, b"")
+
+
+def test_missing_flags_byte_raises_value_error():
+    with pytest.raises(ValueError, match="flags byte"):
+        wire.decode_request_ex(wire.MSG_GET_SCORE, bytes([wire.VERSION]))
+
+
+def test_truncated_deadline_raises_value_error():
+    payload = bytes([wire.VERSION, wire.FLAG_DEADLINE]) + b"\x00\x01"
+    with pytest.raises(ValueError, match="offset 2"):
+        wire.decode_request_ex(wire.MSG_GET_SCORE, payload)
+
+
+def test_short_score_reply_raises_value_error():
+    with pytest.raises(ValueError, match="truncated payload"):
+        wire.decode_reply(wire.MSG_REPLY_SCORE, b"\x00\x01")
+    # count says 4 doubles, payload holds one
+    payload = struct.pack("<I", 4) + struct.pack("<d", 1.0)
+    with pytest.raises(ValueError, match="score count 4"):
+        wire.decode_reply(wire.MSG_REPLY_SCORES, payload)
+
+
+def test_hostile_counts_fail_fast():
+    # count prefixes claiming billions of elements must not loop
+    payload = bytes([wire.VERSION, 0]) + struct.pack("<I", 0xFFFFFFFF)
+    with pytest.raises(ValueError, match="count"):
+        wire.decode_request_ex(wire.MSG_GET_SCORE_BATCH, payload)
+    with pytest.raises(ValueError, match="count"):
+        wire.decode_rank_request(wire.MSG_RANK_BATCH, payload)
+    with pytest.raises(ValueError, match="count"):
+        wire.decode_reply_ranking(wire.MSG_REPLY_RANKING,
+                                  struct.pack("<I", 0xFFFFFFFF))
+
+
+def test_truncated_ranking_reply_raises_value_error():
+    full = wire.encode_reply_ranking([[(1, 2, 3.0), (4, 5, 6.0)]])[5:]
+    for cut in range(len(full)):
+        try:
+            out = wire.decode_reply_ranking(wire.MSG_REPLY_RANKING,
+                                            full[:cut])
+        except ValueError:
+            continue      # the only acceptable exception type
+        # prefixes that happen to parse must be a prefix of the data
+        assert isinstance(out, list)
+
+
+@pytest.mark.parametrize("frame,decoder", [
+    (wire.encode_get_score("question here", "answer here", 0.5),
+     lambda t, p: wire.decode_request_ex(t, p)),
+    (wire.encode_get_score_batch([("q1", "a1"), ("q2", "a2")]),
+     lambda t, p: wire.decode_request_ex(t, p)),
+    (wire.encode_rank_batch(["one", "two", "three"], 0.1),
+     lambda t, p: wire.decode_rank_request(t, p)),
+    (wire.encode_reply([1.0, 2.0, 3.0]),
+     lambda t, p: wire.decode_reply(t, p)),
+])
+def test_fuzz_truncation_only_raises_value_error(frame, decoder):
+    """Every proper prefix of a valid payload must decode or raise
+    ValueError — never IndexError/struct.error (the server's typed protocol
+    error path depends on it)."""
+    t, payload = frame[4], frame[5:]
+    for cut in range(len(payload)):
+        try:
+            decoder(t, payload[:cut])
+        except ValueError:
+            pass
