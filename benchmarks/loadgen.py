@@ -22,7 +22,16 @@ p99 of unhedged round-robin dispatch against hedged dispatch
 (``serving.hedge.HedgedTransport``: same code path with the hedge delay set
 to infinity for the unhedged baseline).
 
+Process-scaling mode (``run_fabric`` / ``--processes``) spawns N
+pipeline-serving worker PROCESSES behind the health-probed hedging router
+(``serving.fabric``) and drives the open-loop rank schedule through the
+router — the multi-core scaling curve the in-process thread cluster
+structurally cannot produce (featurization holds the GIL). Rows record
+``host_cores``: on a single-core host every process count shares one core,
+so the curve is flat by construction there.
+
   PYTHONPATH=src python -m benchmarks.loadgen            # standalone sweep
+  PYTHONPATH=src python -m benchmarks.loadgen --processes 1,2,4   # fabric
   PYTHONPATH=src python -m benchmarks.run --table loadgen --json out.json
 """
 from __future__ import annotations
@@ -61,6 +70,11 @@ def run_level(address: Tuple[str, int], reqs: Sequence,
     ``mode="score"`` drives pair-scoring RPCs (``reqs`` holds (q, a)
     pairs); ``mode="rank"`` drives v3 whole-pipeline ranking RPCs
     (``reqs`` holds query strings, one ``Client.rank`` per arrival).
+
+    ``address`` may instead be a callable ``factory(wid) -> client`` for
+    transports that are not one socket per connection (the fabric sweep
+    passes router-backed connections so requests route least-loaded across
+    worker processes).
     """
     arrivals = poisson_arrivals(offered_qps, duration_s, seed)
     lock = threading.Lock()
@@ -73,7 +87,7 @@ def run_level(address: Tuple[str, int], reqs: Sequence,
 
     def worker(wid: int):
         try:
-            cl = SV.Client(address)
+            cl = address(wid) if callable(address) else SV.Client(address)
         except OSError:
             with lock:
                 counts["error"] += len(arrivals[wid::n_conns])
@@ -271,6 +285,77 @@ def run_hedged(world=None, backend: str = "jit", n_requests: int = 60,
     return rows
 
 
+class _RouterConn:
+    """One loadgen 'connection' over the fabric's shared router. The
+    router serializes attempts per worker endpoint (one socket each), so
+    M concurrent _RouterConns keep at most n_workers requests in flight —
+    exactly the fleet's service parallelism. The router owns the sockets;
+    close here is a no-op."""
+
+    reconnect = False
+
+    def __init__(self, router):
+        self._router = router
+
+    def rank(self, query, deadline_s=None):
+        # The router's hedge path retries sheds/drains on the backup
+        # worker; per-request deadlines stay client-side here (the
+        # HedgedTransport protocol methods carry no deadline).
+        return self._router.rank(query)
+
+    def close(self):
+        pass
+
+
+def run_fabric(process_counts: Sequence[int] = (1, 2, 4),
+               offered_qps: float = 60.0, duration_s: float = 3.0,
+               backend: str = "numpy", train_steps: int = 1) -> List[Dict]:
+    """Process-scaling sweep: for each N, spawn N pipeline-serving worker
+    processes behind the health-probed hedging router and drive the same
+    open-loop rank schedule through it. The client side needs only the
+    query strings (the deterministic demo corpus), not a trained world —
+    every worker process builds its own.
+
+    Rows record ``host_cores``; interpret the curve against it (N worker
+    processes on one core time-share that core, so the single-core curve
+    is flat — the fabric removes the GIL ceiling, not the hardware's).
+    """
+    import os
+
+    from repro.data import qa as QA
+    from repro.serving.fabric import Fabric
+
+    queries = QA.generate_corpus(n_docs=80, n_questions=60,
+                                 seed=0).questions
+    host_cores = float(os.cpu_count() or 1)
+    rows: List[Dict] = []
+    for n in process_counts:
+        with Fabric(n_workers=n, backend=backend,
+                    train_steps=train_steps) as fab:
+            router = fab.router
+            for q in queries[:max(2 * n, 4)]:
+                router.rank(q)          # warm every worker's scoring path
+            lvl = run_level(lambda wid: _RouterConn(router), queries,
+                            offered_qps, duration_s,
+                            n_conns=max(2 * n, 4), mode="rank")
+            qps = max(lvl["achieved_qps"], 1e-9)
+            rs = router.stats()
+            rows.append({
+                "name": f"loadgen/fabric-x{n}-offered{int(offered_qps)}",
+                "us_per_call": 1e6 / qps,
+                "derived": (f"qps={lvl['achieved_qps']:.1f} "
+                            f"p50_ms={lvl['p50_ms']:.2f} "
+                            f"p99_ms={lvl['p99_ms']:.2f} "
+                            f"err={int(lvl['n_error'])} "
+                            f"workers={n} "
+                            f"host_cores={int(host_cores)}"),
+                "fabric": {**lvl, "n_workers": float(n),
+                           "host_cores": host_cores,
+                           **{f"router_{k}": v for k, v in rs.items()}},
+            })
+    return rows
+
+
 def _make_requests(corpus, pairs, n: int):
     reqs = []
     for qi, di, si, _ in (pairs * 50)[:n]:
@@ -357,5 +442,28 @@ def run(world=None, qps_levels: Sequence[float] = (100.0, 300.0),
 
 
 if __name__ == "__main__":
-    for row in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--processes", default=None, metavar="N,N,...",
+                    help="fabric process-scaling sweep over these worker-"
+                         "process counts (e.g. 1,2,4) instead of the "
+                         "default server sweep")
+    ap.add_argument("--qps", type=float, default=60.0,
+                    help="offered QPS for the fabric sweep")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="seconds per fabric sweep level")
+    ap.add_argument("--backend", default="numpy",
+                    help="worker scorer backend for the fabric sweep")
+    ap.add_argument("--train-steps", type=int, default=1,
+                    help="worker training steps for the fabric sweep")
+    cli = ap.parse_args()
+    if cli.processes:
+        counts = tuple(int(x) for x in cli.processes.split(","))
+        out = run_fabric(counts, offered_qps=cli.qps,
+                         duration_s=cli.duration, backend=cli.backend,
+                         train_steps=cli.train_steps)
+    else:
+        out = run()
+    for row in out:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

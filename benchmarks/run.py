@@ -16,7 +16,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table", default="all",
                     choices=["all", "1", "2", "e2e", "pipeline_plans",
-                             "loadgen", "roofline"])
+                             "loadgen", "fabric", "roofline"])
+    ap.add_argument("--processes", default="1,2,4", metavar="N,N,...",
+                    help="worker-process counts for --table fabric")
     ap.add_argument("--naive", action="store_true",
                     help="include the naive per-filter conv condition")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -44,6 +46,12 @@ def main() -> None:
         rows += pipeline_plans.run(world=world)
     if args.table in ("all", "loadgen"):
         rows += loadgen.run(world=world)
+    if args.table == "fabric":
+        # Not in "all": each process count spawns/tears down a worker
+        # fleet (several seconds of process startup per level), so the
+        # sweep runs only when asked for.
+        rows += loadgen.run_fabric(
+            tuple(int(x) for x in args.processes.split(",")))
     if args.table in ("all", "roofline"):
         rows += roofline_table.run()
 

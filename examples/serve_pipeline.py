@@ -44,6 +44,14 @@ algebra (repro.core.ops) and lowers it to three execution plans
              crosses the wire. (``python -m repro.launch.serve
              --serve-pipeline`` stands up the same thing as a CLI service;
              lists of endpoints hedge through serving.hedge.)
+
+``--fabric N`` runs the multi-process deployment demo instead: spawn N
+pipeline-serving worker PROCESSES behind the health-probed hedging router
+(repro.serving.fabric), sweep ranking traffic through the router, drain one
+worker gracefully (finish in-flight, shed new work, route around it),
+restart it (it rejoins and takes traffic again), and tear the fleet down —
+the spawn -> sweep -> drain -> teardown cycle of a compose-style
+deployment, against live local processes.
 """
 import argparse
 import gc
@@ -67,7 +75,15 @@ def main():
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--policy", default="least_outstanding")
     ap.add_argument("--max-queue", type=int, default=512)
+    ap.add_argument("--fabric", type=int, default=0, metavar="N",
+                    help="run the multi-process fabric demo with N worker "
+                         "processes (spawn -> sweep -> drain -> teardown) "
+                         "instead of the in-process tour")
     args = ap.parse_args()
+
+    if args.fabric > 0:
+        fabric_demo(args.fabric)
+        return
 
     print("== building world (corpus, index, trained reranker) ==")
     cfg, params, corpus, tok, index, pairs = build_world(train_steps=80)
@@ -203,6 +219,63 @@ def main():
             f"{k}={v:.1f}" for k, v in sorted(pool.stats().items())
             if k.endswith("_requests") or k == "outstanding_rows"))
         pool.stop()
+
+
+def fabric_demo(n_workers: int):
+    """Spawn -> sweep -> drain -> teardown against live worker processes
+    (mirrors a compose deployment's up / load / drain-one / down cycle)."""
+    from repro.data import qa as QA
+    from repro.serving.fabric import Fabric
+
+    queries = QA.generate_corpus(n_docs=80, n_questions=60,
+                                 seed=0).questions
+
+    print(f"== spawn: {n_workers} pipeline-serving worker processes ==")
+    t0 = time.perf_counter()
+    with Fabric(n_workers=n_workers, backend="numpy",
+                train_steps=1) as fab:
+        for w in fab.workers:
+            print(f"  worker {w.slot} pid={w.proc.pid} addr={w.address}")
+        print(f"  fleet ready in {time.perf_counter() - t0:.1f}s "
+              f"(each process: own interpreter, jit cache, admission)")
+
+        print("\n== sweep: ranking traffic through the health router ==")
+        lats = []
+        t0 = time.perf_counter()
+        for i, q in enumerate(queries[:40]):
+            t1 = time.perf_counter()
+            fab.router.rank(q)
+            lats.append(time.perf_counter() - t1)
+        dt = time.perf_counter() - t0
+        p50, p99 = percentile_stats(lats)
+        print(f"  40 rank RPCs  QPS={40 / dt:6.1f}  p50={p50 * 1e3:.1f}ms "
+              f"p99={p99 * 1e3:.1f}ms")
+        for slot, snap in sorted(fab.router.snapshot().items()):
+            print(f"  worker {slot} health: " + " ".join(
+                f"{k}={v:g}" for k, v in sorted(snap.items())))
+
+        print("\n== drain worker 0 (graceful: finish in-flight, shed new,"
+              " route around) ==")
+        snap = fab.drain_worker(0)
+        print(f"  drained: inflight={snap['inflight']:g} "
+              f"queue_depth={snap['queue_depth']:g}")
+        for q in queries[40:44]:
+            fab.router.rank(q)          # traffic keeps flowing on the rest
+        print(f"  traffic continues on "
+              f"{int(fab.router.stats()['routable_workers'])} "
+              f"routable worker(s)")
+
+        print("\n== restart worker 0 (drain -> terminate -> respawn ->"
+              " rejoin) ==")
+        addr = fab.restart_worker(0)
+        print(f"  rejoined at {addr}; routable="
+              f"{int(fab.router.stats()['routable_workers'])}")
+        fab.router.rank(queries[44])
+        s = fab.stats()
+        print(f"  fabric stats: alive={int(s['alive_workers'])} "
+              f"respawns={int(s['respawns'])} "
+              f"hedged={int(s['router_hedged'])}")
+    print("\n== teardown complete ==")
 
 
 if __name__ == "__main__":

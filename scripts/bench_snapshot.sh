@@ -1,18 +1,37 @@
 #!/usr/bin/env bash
 # Per-PR perf snapshot: run the pipeline_plans benchmark table (quick mode)
-# and drop the machine-readable rows at the repo root, so the perf
-# trajectory accumulates one JSON per PR.
+# plus the fabric process-scaling sweep and drop the machine-readable rows
+# at the repo root, so the perf trajectory accumulates one JSON per PR.
 #
-#   scripts/bench_snapshot.sh            # writes BENCH_pr5.json
-#   scripts/bench_snapshot.sh pr6        # writes BENCH_pr6.json
+#   scripts/bench_snapshot.sh            # writes BENCH_pr6.json
+#   scripts/bench_snapshot.sh pr7        # writes BENCH_pr7.json
+#   PROCESSES=1,2 scripts/bench_snapshot.sh   # smaller fabric sweep
 #
 # The snapshot covers the four execution plans (local / batched / remote /
-# remote_pipeline) with qps + speedup columns; compare files across PRs to
-# catch regressions (see ROADMAP "Open items" for the loadgen soak gate).
+# remote_pipeline) with qps + speedup columns, then appends the
+# loadgen --processes rows (N worker processes behind the fabric router;
+# each row records host_cores — interpret scaling against it). Compare
+# files across PRs to catch regressions.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-tag="${1:-pr5}"
+tag="${1:-pr6}"
 out="BENCH_${tag}.json"
+procs="${PROCESSES:-1,2,4}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --table pipeline_plans --json "$out"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --table fabric --processes "$procs" \
+    --json "${out}.fabric.tmp"
+# Append the fabric rows to the snapshot (one JSON list per PR).
+python - "$out" "${out}.fabric.tmp" <<'EOF'
+import json, sys
+out, tmp = sys.argv[1], sys.argv[2]
+with open(out) as f:
+    rows = json.load(f)
+with open(tmp) as f:
+    rows += json.load(f)
+with open(out, "w") as f:
+    json.dump(rows, f, indent=2, sort_keys=True)
+EOF
+rm -f "${out}.fabric.tmp"
 echo "snapshot written to $out"

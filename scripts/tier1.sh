@@ -2,8 +2,12 @@
 # Tier-1 fast verify: the full suite minus the heavy (slow-marked)
 # architecture/system smoke tests (~1 min vs ~2.5 min). Extra args pass
 # through to pytest, e.g. scripts/tier1.sh -k ops_plan.
-# For the per-PR perf snapshot (pipeline_plans table -> BENCH_<pr>.json at
-# the repo root), run scripts/bench_snapshot.sh after the suite is green.
+# The fast set includes the 2-worker-process fabric smoke
+# (tests/test_fabric.py::test_fabric_smoke — spawn, health-route, rank,
+# teardown); the heavier drain/respawn fabric tests carry the slow marker.
+# For the per-PR perf snapshot (pipeline_plans table + fabric process
+# sweep -> BENCH_<pr>.json at the repo root), run scripts/bench_snapshot.sh
+# after the suite is green.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q -m "not slow" "$@"

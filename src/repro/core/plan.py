@@ -116,7 +116,11 @@ class PlanContext:
     fused remote stages can hit different endpoints per backend. The
     ``remote_pipeline`` target resolves the same binding but requires
     ranking-capable endpoints (``rank_batch``: a ``service.Client`` address
-    or a ``serving.engine.PipelineEngine``).
+    or a ``serving.engine.PipelineEngine``). A ``serving.fabric.Fabric``
+    (or anything exposing a ranking-capable ``.router``) binds through its
+    health-probed hedging router, so one plan drives a whole fleet of
+    worker processes; fabric workers serve the pipeline rank RPC, so bind
+    fabrics to the ``remote_pipeline`` target.
     """
 
     tokenizer: Any
@@ -225,6 +229,13 @@ class PlanContext:
         return ("obj", id(remote))
 
     def _single_transport(self, remote, ranking: bool):
+        router = getattr(remote, "router", None)
+        if router is not None and hasattr(router, "rank_batch"):
+            # A ``serving.fabric.Fabric``: its HealthRouter IS the
+            # transport (health-routed + hedged across the worker
+            # processes). The fabric owns the router's lifecycle — it is
+            # NOT added to _owned_clients; Fabric.stop() closes it.
+            return router
         if self._is_address(remote):
             from repro.core.service import Client
             client = Client(remote, retry_sheds=self.remote_retries,
@@ -627,7 +638,8 @@ class ExecutionPlan:
 
     def describe(self) -> str:
         if self.target == "remote_pipeline":
-            hedged = type(self._ranker).__name__ == "HedgedTransport"
+            hedged = any(c.__name__ == "HedgedTransport"
+                         for c in type(self._ranker).__mro__)
             return (f"{self.target}: rank-rpc[{self.pipeline!r}]"
                     + ("[hedged]" if hedged else ""))
         parts = []

@@ -28,12 +28,71 @@ import numpy as np
 from repro.core import wire
 from repro.core.backends import Scorer
 from repro.data.tokenizer import HashingTokenizer, overlap_features
-from repro.serving.admission import SHED_TOO_LARGE
+from repro.serving.admission import SHED_DRAINING, SHED_EXPIRED, SHED_TOO_LARGE
 
 #: Per-connection socket timeout: bounds how long a silent client can hold
 #: a serving thread past ``stop()`` (the read loop re-checks the stop flag
 #: at this cadence).
 CONN_TIMEOUT_S = 0.5
+
+
+class ServerState:
+    """Lifecycle state shared by every connection of one server: the
+    graceful-drain flag plus the in-flight request count (requests past
+    admission whose handler call has not returned). A draining server sheds
+    new work with MSG_SHED "draining" but keeps answering health probes, so
+    a fabric router can watch ``inflight`` reach zero before tearing the
+    worker down."""
+
+    def __init__(self):
+        self.draining = threading.Event()
+        self._lock = threading.Lock()
+        self._inflight = 0
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    def enter(self):
+        with self._lock:
+            self._inflight += 1
+
+    def exit(self):
+        with self._lock:
+            self._inflight -= 1
+
+
+def _health_snapshot(handler, admission, state) -> Dict[str, float]:
+    """The MSG_REPLY_HEALTH payload: enough load signal for a router to
+    route least-loaded across process boundaries (queue depth + per-row
+    service time), plus the readiness bits (draining, inflight)."""
+    s: Dict[str, float] = {
+        "draining": 1.0 if (state is not None
+                            and state.draining.is_set()) else 0.0,
+        "inflight": float(state.inflight) if state is not None else 0.0,
+        "queue_depth": 0.0,
+        "row_service_ms": 0.0,
+    }
+    if admission is not None:
+        a = admission.stats()
+        s["queue_depth"] = a["admission_outstanding_rows"]
+        s["row_service_ms"] = a["row_service_ms"]
+    else:
+        outstanding = getattr(handler, "outstanding_rows", None)
+        if callable(outstanding):
+            s["queue_depth"] = float(outstanding())
+        elif outstanding is not None:
+            s["queue_depth"] = float(outstanding)
+        per_row = getattr(handler, "row_service_s", None)
+        if callable(per_row):
+            per_row = per_row()
+        if per_row:
+            s["row_service_ms"] = float(per_row) * 1e3
+    rows_per_query = getattr(handler, "rows_per_query", None)
+    if rows_per_query is not None:
+        s["rows_per_query"] = float(rows_per_query)
+    return s
 
 
 class QuestionAnsweringHandler:
@@ -56,7 +115,8 @@ class QuestionAnsweringHandler:
 
 
 def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
-                      admission=None) -> None:
+                      admission=None, state: Optional[ServerState] = None
+                      ) -> None:
     """Request loop for one accepted connection, shared by both servers.
 
     Pair-scoring requests need only ``get_scores(pairs) -> array`` on the
@@ -68,6 +128,11 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
     sized for admission by the handler's per-query candidate-row estimate
     (``rows_per_query``, e.g. retrieve depth x sentences per doc on
     ``serving.engine.PipelineEngine``).
+
+    v4 control frames (MSG_HEALTH / MSG_DRAIN) are answered before — and
+    during — drain: health probes never queue behind admission, and a
+    draining server keeps reporting its ``inflight`` count so the drainer
+    can poll it to zero.
     """
     conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     conn.settimeout(CONN_TIMEOUT_S)
@@ -82,6 +147,21 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
             break              # trustworthy past this point — drop it
         if not t:
             break              # clean EOF
+        if t in (wire.MSG_HEALTH, wire.MSG_DRAIN):
+            try:
+                wire.decode_control_request(t, payload)
+            except Exception as e:  # noqa: BLE001 — malformed request
+                frame = wire.encode_error(str(e))
+            else:
+                if t == wire.MSG_DRAIN and state is not None:
+                    state.draining.set()
+                frame = wire.encode_reply_health(
+                    _health_snapshot(handler, admission, state))
+            try:
+                conn.sendall(frame)
+            except OSError:
+                break
+            continue
         is_rank = t in (wire.MSG_RANK, wire.MSG_RANK_BATCH)
         try:
             if is_rank:
@@ -92,6 +172,15 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
         except Exception as e:  # noqa: BLE001 — malformed request
             try:
                 conn.sendall(wire.encode_error(str(e)))
+            except OSError:
+                break
+            continue
+        if state is not None and state.draining.is_set():
+            # Graceful drain: in-flight work finishes, new work is shed
+            # retriably — another replica (or the respawned worker) takes
+            # the retry. Routers stop routing here via the health flag.
+            try:
+                conn.sendall(wire.encode_shed(SHED_DRAINING))
             except OSError:
                 break
             continue
@@ -140,6 +229,8 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                 except OSError:
                     break
                 continue
+        if state is not None:
+            state.enter()
         try:
             try:
                 # Handlers that opt in (supports_deadline, e.g. ReplicaPool)
@@ -165,6 +256,8 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                 if admission is not None:
                     admission.release(n_rows,
                                       time.perf_counter() - arrival)
+                if state is not None:
+                    state.exit()
             conn.sendall(reply)
         except OSError:
             break
@@ -178,6 +271,24 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                 conn.sendall(wire.encode_error(str(e)))
             except OSError:
                 break
+
+
+def _drain(server, timeout_s: float) -> bool:
+    """Shared graceful-drain: stop admitting work (new requests get
+    MSG_SHED "draining"), then wait for every in-flight request — and any
+    rows still queued inside the handler — to finish. Returns True once
+    idle, False on timeout (the flag stays set either way; ``resume()``
+    re-opens)."""
+    server.state.draining.set()
+    deadline = time.perf_counter() + timeout_s
+    while time.perf_counter() < deadline:
+        queued = getattr(server.handler, "outstanding_rows", 0)
+        if callable(queued):
+            queued = queued()
+        if server.state.inflight == 0 and not queued:
+            return True
+        time.sleep(0.005)
+    return False
 
 
 def _make_listener(host: str, port: int, backlog: int) -> socket.socket:
@@ -197,6 +308,7 @@ class SimpleServer:
         self.address = self._sock.getsockname()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self.state = ServerState()
 
     def serve_forever(self):
         self._sock.settimeout(0.2)
@@ -208,7 +320,14 @@ class SimpleServer:
             except OSError:
                 break
             with conn:
-                _serve_connection(conn, self.handler, self._stop)
+                _serve_connection(conn, self.handler, self._stop,
+                                  state=self.state)
+
+    def drain(self, timeout_s: float = 10.0) -> bool:
+        return _drain(self, timeout_s)
+
+    def resume(self):
+        self.state.draining.clear()
 
     def start_background(self) -> "SimpleServer":
         self._thread = threading.Thread(target=self.serve_forever, daemon=True)
@@ -240,7 +359,14 @@ class ThreadPoolServer:
             # Estimate waits from scorer-side service time, not request
             # sojourn (which would double-count queueing).
             admission.set_service_time_source(handler.row_service_s)
+        if admission is not None:
+            # The backlog drains through every replica of the handler at
+            # once — without this hint the wait estimate models a serial
+            # server and sheds deadline requests ~Nx too eagerly.
+            admission.set_effective_parallelism(
+                getattr(handler, "effective_parallelism", 1))
         self.num_workers = num_workers
+        self.state = ServerState()
         self._sock = _make_listener(host, port, backlog)
         self.address = self._sock.getsockname()
         self._stop = threading.Event()
@@ -269,7 +395,7 @@ class ThreadPoolServer:
                 break
             with conn:
                 _serve_connection(conn, self.handler, self._stop,
-                                  self.admission)
+                                  self.admission, self.state)
 
     def _start_workers(self):
         self._workers = [threading.Thread(target=self._worker_loop,
@@ -299,6 +425,13 @@ class ThreadPoolServer:
             s.update(self.handler.stats())
         return s
 
+    def drain(self, timeout_s: float = 10.0) -> bool:
+        return _drain(self, timeout_s)
+
+    def resume(self):
+        """Re-open a drained server for traffic (rejoin without restart)."""
+        self.state.draining.clear()
+
     def stop(self):
         self._stop.set()
         if self._accept_thread is not None:
@@ -325,6 +458,12 @@ class Client:
     Usable as a context manager; on ``ConnectionError`` (server restart, a
     worker dropping the connection) one transparent reconnect + resend is
     attempted per call, so load-generator worker loops survive server churn.
+    A deadline request re-checks its remaining budget before the resend: a
+    budget that expired while the connection was down raises ``ShedError``
+    locally instead of burning a server slot on a request the server would
+    only shed as expired — and a still-live request is re-encoded with the
+    budget it has LEFT (the wire deadline is relative to send time, so
+    resending the original frame would silently refresh it).
 
     ``ShedError`` replies (MSG_SHED back-pressure) are not retried by
     default — shedding is the server telling the caller to back off, and a
@@ -365,9 +504,19 @@ class Client:
             raise ConnectionError("server closed connection")
         return decode(t, payload)
 
-    def _rpc(self, frame: bytes, decode=wire.decode_reply):
+    def _rpc(self, make_frame, deadline_s: Optional[float],
+             decode=wire.decode_reply):
+        """One RPC with at most one transparent reconnect + resend.
+
+        ``make_frame(budget_s)`` encodes the request with the given
+        deadline budget, so the resend after a reconnect carries only the
+        budget that REMAINS — and a request whose budget ran out while the
+        connection was down sheds locally (``ShedError``) instead of being
+        resent to a server that would score-then-shed it as expired.
+        """
+        t0 = time.perf_counter()
         try:
-            return self._roundtrip(frame, decode)
+            return self._roundtrip(make_frame(deadline_s), decode)
         except (ConnectionError, OSError):
             if not self.reconnect:
                 raise
@@ -375,14 +524,23 @@ class Client:
                 self._sock.close()
             except OSError:
                 pass
+            remaining = deadline_s
+            if deadline_s is not None:
+                remaining = deadline_s - (time.perf_counter() - t0)
+                if remaining <= 0:
+                    raise wire.ShedError(
+                        f"{SHED_EXPIRED}: deadline budget "
+                        f"{deadline_s * 1e3:.1f}ms spent during reconnect"
+                    ) from None
             self._sock = self._connect()
-            return self._roundtrip(frame, decode)
+            return self._roundtrip(make_frame(remaining), decode)
 
-    def _rpc_with_retry(self, frame: bytes, decode=wire.decode_reply):
+    def _rpc_with_retry(self, make_frame, deadline_s: Optional[float] = None,
+                        decode=wire.decode_reply):
         attempt = 0
         while True:
             try:
-                return self._rpc(frame, decode)
+                return self._rpc(make_frame, deadline_s, decode)
             except wire.ShedError:
                 if attempt >= self.retry_sheds:
                     raise  # budget spent: overload surfaces to the caller
@@ -394,19 +552,20 @@ class Client:
     def get_score(self, question: str, answer: str,
                   deadline_s: Optional[float] = None) -> float:
         return self._rpc_with_retry(
-            wire.encode_get_score(question, answer, deadline_s))[0]
+            lambda b: wire.encode_get_score(question, answer, b),
+            deadline_s)[0]
 
     def get_score_batch(self, pairs: Sequence[Tuple[str, str]],
                         deadline_s: Optional[float] = None):
         return self._rpc_with_retry(
-            wire.encode_get_score_batch(pairs, deadline_s))
+            lambda b: wire.encode_get_score_batch(pairs, b), deadline_s)
 
     def rank(self, query: str, deadline_s: Optional[float] = None
              ) -> List[wire.RankedItem]:
         """v3 whole-pipeline ranking: one query in, one ranked
         (doc_id, sent_id, score) list out."""
-        out = self._rpc_with_retry(wire.encode_rank(query, deadline_s),
-                                   wire.decode_reply_ranking)
+        out = self._rpc_with_retry(lambda b: wire.encode_rank(query, b),
+                                   deadline_s, wire.decode_reply_ranking)
         if not out:     # a misbehaving server must fail typed, not crash
             raise ValueError("ranking reply held no rankings for the query")
         return out[0]
@@ -417,8 +576,22 @@ class Client:
         """v3 whole-pipeline ranking for a query batch — ONE RPC for the
         whole batch instead of chunked per-pair scoring calls."""
         return self._rpc_with_retry(
-            wire.encode_rank_batch(queries, deadline_s),
+            lambda b: wire.encode_rank_batch(queries, b), deadline_s,
             wire.decode_reply_ranking)
+
+    def health(self, deadline_s: Optional[float] = None
+               ) -> Dict[str, float]:
+        """v4 health/readiness probe: queue depth, row_service_ms,
+        inflight, draining (see ``wire.MSG_HEALTH``)."""
+        return self._rpc_with_retry(lambda b: wire.encode_health(b),
+                                    deadline_s, wire.decode_reply_health)
+
+    def drain(self) -> Dict[str, float]:
+        """Ask the server to drain gracefully (v4 MSG_DRAIN): it finishes
+        in-flight work, sheds everything new, and acks with a health
+        snapshot — poll ``health()`` until ``inflight`` hits zero."""
+        return self._rpc_with_retry(lambda b: wire.encode_drain(b), None,
+                                    wire.decode_reply_health)
 
     def close(self):
         self._sock.close()

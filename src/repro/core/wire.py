@@ -34,6 +34,18 @@ Version history:
        pair-scoring frames keep decoding on a v3 server; a v3 ranking
        request against a server whose handler only scores pairs gets a
        clean MSG_ERROR reply (see core.service dispatch).
+  v4 — same header as v2/v3; adds the control-plane messages the
+       multi-process serving fabric routes on (see serving.fabric):
+         MSG_HEALTH        (header only)          -> MSG_REPLY_HEALTH
+         MSG_DRAIN         (header only)          -> MSG_REPLY_HEALTH
+         MSG_REPLY_HEALTH  u32 n | n x (key:str, f64 value)
+       MSG_HEALTH is a readiness/load probe: the reply carries the
+       server's queue depth, per-row service time, in-flight count, and
+       draining flag, so a router can route least-loaded across process
+       boundaries. MSG_DRAIN flips the server into graceful drain (new
+       work is shed with MSG_SHED "draining", in-flight requests finish)
+       and acks with the same health snapshot. v1-v3 frames keep
+       decoding unchanged.
 
 Malformed input: every decoder raises ``ValueError`` with byte-offset
 context on truncated or hostile payloads — never a bare ``IndexError`` or
@@ -44,18 +56,21 @@ from __future__ import annotations
 
 import socket
 import struct
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-VERSION = 3
+VERSION = 4
 MIN_VERSION = 1
 FLAG_DEADLINE = 1
 MSG_GET_SCORE = 1
 MSG_GET_SCORE_BATCH = 2
 MSG_RANK = 3
 MSG_RANK_BATCH = 4
+MSG_HEALTH = 5
+MSG_DRAIN = 6
 MSG_REPLY_SCORE = 101
 MSG_REPLY_SCORES = 102
 MSG_REPLY_RANKING = 103
+MSG_REPLY_HEALTH = 104
 MSG_SHED = 254
 MSG_ERROR = 255
 
@@ -159,6 +174,63 @@ def encode_rank_batch(queries: Sequence[str],
     for q in queries:
         payload += _pack_str(q)
     return struct.pack("<IB", len(payload), MSG_RANK_BATCH) + payload
+
+
+def encode_health(deadline_s: Optional[float] = None) -> bytes:
+    """Health/readiness probe: header-only request, answered with
+    MSG_REPLY_HEALTH (queue depth, row_service_ms, inflight, draining)."""
+    payload = _request_header(deadline_s)
+    return struct.pack("<IB", len(payload), MSG_HEALTH) + payload
+
+
+def encode_drain(deadline_s: Optional[float] = None) -> bytes:
+    """Graceful-drain control frame: the server stops admitting new work
+    (MSG_SHED "draining"), finishes in-flight requests, and acks with a
+    MSG_REPLY_HEALTH snapshot the drainer can poll to completion."""
+    payload = _request_header(deadline_s)
+    return struct.pack("<IB", len(payload), MSG_DRAIN) + payload
+
+
+def decode_control_request(msg_type: int, payload: bytes) -> Optional[float]:
+    """Decode a v4 control frame (MSG_HEALTH / MSG_DRAIN); returns the
+    deadline_s or None (control frames carry no body past the header)."""
+    if msg_type not in (MSG_HEALTH, MSG_DRAIN):
+        raise ValueError(f"unknown control msg type {msg_type}")
+    return _decode_header(memoryview(payload))[0]
+
+
+def encode_reply_health(stats: Dict[str, float]) -> bytes:
+    """Health snapshot reply: u32 n | n x (key:str, f64 value)."""
+    parts = [struct.pack("<I", len(stats))]
+    for key, value in stats.items():
+        parts.append(_pack_str(key))
+        parts.append(struct.pack("<d", float(value)))
+    payload = b"".join(parts)
+    return struct.pack("<IB", len(payload), MSG_REPLY_HEALTH) + payload
+
+
+def decode_reply_health(msg_type: int, payload: bytes) -> Dict[str, float]:
+    """Decode a MSG_REPLY_HEALTH frame (shed/error frames raise exactly
+    like ``decode_reply``)."""
+    if msg_type == MSG_SHED:
+        raise ShedError(f"request shed: {_reply_text(payload)}")
+    if msg_type == MSG_ERROR:
+        raise RuntimeError(f"server error: {_reply_text(payload)}")
+    if msg_type != MSG_REPLY_HEALTH:
+        raise ValueError(f"unknown health reply type {msg_type}")
+    buf = memoryview(payload)
+    (n,) = _unpack_from("<I", buf, 0)
+    off = 4
+    # Every entry needs at least a 4-byte key length prefix + an 8-byte
+    # value, so a hostile count fails fast.
+    _check_count(n, len(buf) - off, 12, "health entry")
+    out: Dict[str, float] = {}
+    for _ in range(n):
+        key, off = _unpack_str(buf, off)
+        (value,) = _unpack_from("<d", buf, off)
+        off += 8
+        out[key] = value
+    return out
 
 
 def encode_reply(scores: Sequence[float]) -> bytes:

@@ -11,6 +11,13 @@
   # print how the canonical ranking pipeline lowers to each execution plan
   PYTHONPATH=src python -m repro.launch.serve --describe
 
+  # multi-process fabric: 4 pipeline-serving worker processes behind a
+  # health-probed hedging router (serving.fabric), supervised until ^C
+  PYTHONPATH=src python -m repro.launch.serve --fabric 4 --backend numpy
+
+  # ask a running server to drain gracefully (finish in-flight, shed new)
+  PYTHONPATH=src python -m repro.launch.serve --drain 127.0.0.1:9090
+
   # serve the WHOLE multi-stage pipeline behind one RPC (wire v3
   # MSG_RANK / MSG_RANK_BATCH; drive with Client.rank / rank_batch or a
   # plan(pipeline, "remote_pipeline", ctx) on the client side)
@@ -30,6 +37,7 @@ examples use; replica pools still build one independent scorer per replica
 from __future__ import annotations
 
 import argparse
+import time
 
 from repro.launch.world import build_world
 from repro.core import backends as BK
@@ -141,7 +149,42 @@ def main():
                     help="fixed hedge delay (ms) for plans whose "
                          "ctx.remote lists several endpoints; default "
                          "adapts to the observed p95")
+    ap.add_argument("--fabric", type=int, default=0, metavar="N",
+                    help="spawn N pipeline-serving worker PROCESSES "
+                         "behind a health-probed hedging router "
+                         "(serving.fabric) and supervise until ^C")
+    ap.add_argument("--drain", default=None, metavar="HOST:PORT",
+                    help="send MSG_DRAIN to a running server (finish "
+                         "in-flight, shed new work), print its health "
+                         "snapshot, and exit")
     args = ap.parse_args()
+
+    if args.drain:
+        host, _, port = args.drain.rpartition(":")
+        with SV.Client((host or "127.0.0.1", int(port))) as client:
+            snap = client.drain()
+        print("drain acknowledged: " + " ".join(
+            f"{k}={v:g}" for k, v in sorted(snap.items())))
+        return
+    if args.fabric > 0:
+        # The supervisor builds no world of its own — each worker process
+        # trains/compiles independently (that is the point of the fabric).
+        from repro.serving.fabric import Fabric
+        with Fabric(n_workers=args.fabric, backend=args.backend,
+                    train_steps=args.train_steps, server="threadpool",
+                    worker_threads=args.workers,
+                    max_queue=args.max_queue) as fab:
+            for w in fab.workers:
+                print(f"fabric worker {w.slot} (pid {w.proc.pid}) "
+                      f"on {w.address}")
+            print(f"fabric up: {args.fabric} workers, router probing "
+                  f"health; ^C to tear down", flush=True)
+            try:
+                while True:
+                    time.sleep(1.0)
+            except KeyboardInterrupt:
+                pass
+        return
 
     cfg, params, corpus, tok, index, _ = build_world(args.train_steps)
     if args.describe:
@@ -155,6 +198,12 @@ def main():
         mode += " serve-pipeline(rank-rpc)"
     print(f"serving QuestionAnswering ({args.backend}, {mode}) "
           f"on {srv.address}")
+    # Machine-readable discovery line for the fabric supervisor: workers
+    # bind port 0, so this flushed line is how serving.fabric learns the
+    # address (stdout is a PIPE there — without flush=True the line sits
+    # in the child's block buffer and the supervisor times out waiting).
+    host, port = srv.address[0], srv.address[1]
+    print(f"FABRIC_READY {host} {port}", flush=True)
     try:
         srv.serve_forever()
     except KeyboardInterrupt:

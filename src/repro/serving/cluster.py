@@ -147,16 +147,25 @@ class ReplicaPool:
     def outstanding_rows(self) -> int:
         return sum(r.outstanding_rows for r in self.replicas)
 
+    @property
+    def effective_parallelism(self) -> int:
+        """How many backlogs drain concurrently — the admission
+        controller's parallelism hint (see
+        ``AdmissionController.set_effective_parallelism``)."""
+        return len(self.replicas)
+
     def row_service_s(self) -> Optional[float]:
-        """Cluster-wide per-row service-time estimate for admission control:
-        mean scorer-side per-row time over warmed replicas, divided by the
-        replica count (replicas drain the backlog in parallel). None until
+        """Per-row scorer service-time estimate for admission control: the
+        mean scorer-side per-row time over warmed replicas. This is the
+        time ONE replica spends on one row; the admission controller
+        divides its drain estimate by ``effective_parallelism`` (dividing
+        here too would double-count the pool's parallelism). None until
         some replica has scored a batch."""
         obs = [r.batcher.row_scorer_s for r in self.replicas]
         obs = [o for o in obs if o is not None]
         if not obs:
             return None
-        return (sum(obs) / len(obs)) / len(self.replicas)
+        return sum(obs) / len(obs)
 
     def stats(self) -> Dict[str, float]:
         s = self.tracker.summary()

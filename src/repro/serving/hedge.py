@@ -88,11 +88,21 @@ class HedgedTransport:
             self._observed += 1
         results.put((idx, None, val))
 
-    def _call(self, method: str, args: tuple):
+    def _pick_endpoints(self) -> "tuple":
+        """Choose ``(primary, backup)`` endpoint indices for one request;
+        ``backup is None`` means there is nothing to hedge to. The base
+        policy is round-robin primary with the next endpoint as backup;
+        subclasses route on live signals instead (``fabric.HealthRouter``
+        picks the least-loaded healthy workers from MSG_HEALTH probes)."""
         n = len(self._transports)
         with self._meta:
             primary = self._rr % n
             self._rr += 1
+        return primary, ((primary + 1) % n if n > 1 else None)
+
+    def _call(self, method: str, args: tuple):
+        primary, backup = self._pick_endpoints()
+        with self._meta:
             self._requests += 1
         results: "queue.Queue" = queue.Queue()
         threading.Thread(target=self._attempt,
@@ -100,7 +110,7 @@ class HedgedTransport:
                          daemon=True).start()
         delay = self.hedge_delay_s()
         first = None
-        if n == 1 or not math.isfinite(delay):
+        if backup is None or not math.isfinite(delay):
             first = results.get()           # hedging disabled: just wait
         else:
             try:
@@ -109,12 +119,11 @@ class HedgedTransport:
                 first = None                # primary is slow: hedge
         if first is not None and first[1] is None:
             return first[2]
-        if n == 1:
+        if backup is None:
             raise first[1]
-        # Hedge: fire the same request at the next endpoint. The primary
+        # Hedge: fire the same request at the backup endpoint. The primary
         # attempt keeps draining its reply in the background; whichever
         # answers first (successfully) wins.
-        backup = (primary + 1) % n
         with self._meta:
             self._hedged += 1
         threading.Thread(target=self._attempt,

@@ -246,3 +246,72 @@ def test_microbatcher_outstanding_rows_settle(world):
     mb.stop()
     assert s["outstanding_rows"] == 0
     assert s["rows_scored"] == 6
+
+
+# ------------------------------------------------- drain-model parallelism
+
+def test_admission_parallelism_divides_wait_estimate():
+    ac = AdmissionController(max_queue_rows=10_000,
+                             init_row_service_s=0.010,
+                             effective_parallelism=4)
+    now = time.perf_counter()
+    assert ac.try_admit(100) is None
+    # Serially 150 rows x 10ms = 1.5s > the 0.5s budget (the old model
+    # shed this as late); four concurrent servers drain it in ~0.375s.
+    assert ac.try_admit(50, deadline_abs=now + 0.5, now=now) is None
+    s = ac.stats()
+    assert s["shed_late"] == 0
+    assert s["effective_parallelism"] == 4.0
+    assert ac.estimated_wait_s(0) == pytest.approx(150 * 0.010 / 4)
+
+
+def test_set_effective_parallelism_updates_and_clamps():
+    ac = AdmissionController(init_row_service_s=0.010)
+    ac.try_admit(100)
+    serial = ac.estimated_wait_s(0)
+    ac.set_effective_parallelism(4)
+    assert ac.estimated_wait_s(0) == pytest.approx(serial / 4)
+    ac.set_effective_parallelism(0)          # nonsense input clamps to 1
+    assert ac.estimated_wait_s(0) == pytest.approx(serial)
+
+
+def test_four_replica_pool_no_spurious_late_sheds(world):
+    """Regression: moderate load on a 4-replica pool, deadlines that fit
+    through four concurrent replicas but NOT through a serial drain. The
+    parallelism-aware controller admits everything; the old serial model
+    (parallelism hint left at 1) sheds the tail of the same load late."""
+    cfg, params, corpus, tok = world
+
+    def make_scorer():
+        def scorer(q_tok, a_tok, feats):
+            time.sleep(0.002 * q_tok.shape[0])      # 2ms/row, one replica
+            return np.zeros((q_tok.shape[0],), np.float32)
+        return scorer
+
+    pool = ReplicaPool([make_scorer() for _ in range(4)], tok, corpus.idf,
+                       cfg.max_len, policy="least_outstanding")
+    try:
+        pool.get_scores(_pairs(corpus, 8))           # warm row_service_s
+        per_row = pool.row_service_s()
+        assert per_row is not None and per_row > 0
+        assert pool.effective_parallelism == 4
+
+        # Wired exactly as ThreadPoolServer wires a pool handler.
+        ac = AdmissionController(max_queue_rows=4096,
+                                 service_time_source=pool.row_service_s)
+        ac.set_effective_parallelism(pool.effective_parallelism)
+        serial = AdmissionController(max_queue_rows=4096,
+                                     service_time_source=pool.row_service_s)
+
+        now = time.perf_counter()
+        deadline = now + 100 * per_row
+        sheds_serial = 0
+        for _ in range(20):                          # 20 x 16 = 320 rows
+            assert ac.try_admit(16, deadline_abs=deadline, now=now) is None
+            if serial.try_admit(16, deadline_abs=deadline,
+                                now=now) is not None:
+                sheds_serial += 1
+        assert ac.stats()["shed_late"] == 0          # the fix
+        assert sheds_serial > 0                      # the old behavior
+    finally:
+        pool.stop()

@@ -173,3 +173,73 @@ def test_retry_backoff_is_exponential_and_capped():
         cl.close()
     finally:
         sock.close()
+
+
+# ------------------------------------- reconnect re-checks the deadline --
+
+def _stalling_listener(stall_s: float, record: dict):
+    """First connection: read one request, stall, drop the connection
+    (mid-RPC ConnectionError on the client). Second connection (if the
+    client reconnects and resends): record the resent frame's deadline and
+    answer a score."""
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(2)
+
+    def serve():
+        conn, _ = lst.accept()
+        record["first_request"] = wire.read_frame(conn)
+        time.sleep(stall_s)
+        conn.close()                         # client sees ConnectionError
+        lst.settimeout(1.0)
+        try:
+            conn2, _ = lst.accept()
+        except socket.timeout:
+            return                           # client never resent: good
+        record["reconnected"] = True
+        t, payload = wire.read_frame(conn2)
+        record["resent_deadline"] = wire.decode_request_ex(t, payload)[1]
+        conn2.sendall(wire.encode_reply([0.5]))
+        conn2.close()
+
+    th = threading.Thread(target=serve, daemon=True)
+    th.start()
+    return lst, th
+
+
+def test_reconnect_with_expired_budget_sheds_locally():
+    """Regression: a request whose deadline expired while the connection
+    was down must raise ShedError locally — resending it would only burn a
+    server slot on work the server immediately sheds as expired."""
+    record = {}
+    lst, th = _stalling_listener(stall_s=0.08, record=record)
+    try:
+        cl = SV.Client(lst.getsockname())
+        with pytest.raises(wire.ShedError, match="expired"):
+            cl.get_score("q", "a", deadline_s=0.05)   # < the 80ms stall
+        cl.reconnect = False
+        cl.close()
+        th.join(timeout=3.0)
+        assert "reconnected" not in record           # no resend happened
+    finally:
+        lst.close()
+
+
+def test_reconnect_with_live_budget_resends_remaining_deadline():
+    """The resent frame must carry only the budget LEFT after the stall —
+    the wire deadline is relative to send time, so resending the original
+    frame would silently refresh the full budget."""
+    record = {}
+    lst, th = _stalling_listener(stall_s=0.08, record=record)
+    try:
+        cl = SV.Client(lst.getsockname())
+        assert cl.get_score("q", "a", deadline_s=5.0) == pytest.approx(0.5)
+        cl.reconnect = False
+        cl.close()
+        th.join(timeout=3.0)
+        assert record.get("reconnected")
+        resent = record["resent_deadline"]
+        assert resent is not None
+        assert 0.0 < resent <= 5.0 - 0.08 + 0.02     # stall burned >= 80ms
+    finally:
+        lst.close()

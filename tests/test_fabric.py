@@ -1,0 +1,210 @@
+"""Multi-process serving fabric (serving.fabric): worker spawn/discovery,
+health-probed routing, graceful drain with zero in-flight loss, crash
+detection + respawn, and plan() binding through the fabric router.
+
+The fast smoke spawns 2 real worker processes (numpy backend, train_steps=1
+— ~5s each, overlapped) and stays in the tier-1 fast set; the drain-under-
+load and crash-respawn tests carry the slow marker.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.serving.fabric import (Fabric, FabricWorker, HealthRouter,
+                                  WorkerEndpoint)
+
+
+@pytest.fixture(scope="module")
+def fabric():
+    with Fabric(n_workers=2, backend="numpy", train_steps=1,
+                probe_interval_s=0.05) as fab:
+        yield fab
+
+
+# ------------------------------------------------------------------ smoke --
+
+def test_fabric_smoke(fabric):
+    """Spawn -> discover -> health-route -> rank -> stats, end to end."""
+    assert all(w.alive for w in fabric.workers)
+    snaps = fabric.router.snapshot()
+    assert set(snaps) == {0, 1}
+    for snap in snaps.values():
+        assert snap["draining"] == 0.0
+        assert snap["rows_per_query"] > 0
+    out = fabric.router.rank_batch(["what is the capital",
+                                    "who wrote the book"])
+    assert len(out) == 2
+    for ranking in out:
+        assert ranking, "empty ranking from fabric worker"
+        doc, sent, score = ranking[0]
+        assert isinstance(doc, int) and isinstance(score, float)
+    s = fabric.stats()
+    assert s["alive_workers"] == 2.0
+    assert s["router_routable_workers"] == 2.0
+
+
+def test_fabric_plan_binding(fabric):
+    """A Fabric binds into the pipeline algebra: plan(pipeline,
+    'remote_pipeline', ctx) with ctx.remote = the fabric routes rankings
+    through the HealthRouter."""
+    from repro.configs import get_config, reduced
+    from repro.core import ops
+    from repro.core.plan import PlanContext, plan
+    from repro.data import qa as QA
+    from repro.data.tokenizer import HashingTokenizer
+
+    cfg = reduced(get_config("sm-cnn"))
+    corpus = QA.generate_corpus(n_docs=80, n_questions=60, seed=0)
+    tok = HashingTokenizer(cfg.vocab_size)
+    ctx = PlanContext(tokenizer=tok, idf=corpus.idf, max_len=cfg.max_len,
+                      documents=corpus.documents, remote=fabric)
+    pipeline = (ops.Retrieve(h=10) >> ops.DynamicCutoff(margin=3.0)
+                >> ops.Rerank("numpy", k=3))
+    pl = plan(pipeline, "remote_pipeline", ctx)
+    assert "hedged" in pl.describe()
+    out = pl.run_many(list(corpus.questions[:3]))
+    assert len(out) == 3 and all(len(r) > 0 for r in out)
+
+
+def test_router_routes_around_draining_worker(fabric):
+    """After MSG_DRAIN a worker stops being routable; requests keep
+    succeeding via the other worker; restart brings it back."""
+    snap = fabric.drain_worker(0)
+    assert snap["draining"] == 1.0 and snap["inflight"] == 0.0
+    assert fabric.router.stats()["routable_workers"] == 1.0
+    for q in ("during drain one", "during drain two"):
+        assert fabric.router.rank_batch([q])[0]
+    fabric.restart_worker(0)
+    assert fabric.router.stats()["routable_workers"] == 2.0
+    assert fabric.router.rank_batch(["after restart"])[0]
+
+
+# ------------------------------------------------------------ heavy tests --
+
+@pytest.mark.slow
+def test_drain_under_load_loses_nothing():
+    """The acceptance bar: drain a worker mid-load and count every
+    request — zero errors, zero losses. New work sheds retriably at the
+    draining worker and the router's hedge path fails it over; in-flight
+    work finishes before drain returns."""
+    with Fabric(n_workers=2, backend="numpy", train_steps=1,
+                probe_interval_s=0.02) as fab:
+        results = {"ok": 0, "err": []}
+        lock = threading.Lock()
+        stop = threading.Event()
+
+        def pump(tid):
+            i = 0
+            while not stop.is_set():
+                try:
+                    out = fab.router.rank(f"load query {tid} {i}")
+                    with lock:
+                        results["ok"] += 1
+                    assert out
+                except Exception as e:  # noqa: BLE001 — counted, asserted
+                    with lock:
+                        results["err"].append(repr(e))
+                i += 1
+
+        threads = [threading.Thread(target=pump, args=(t,), daemon=True)
+                   for t in range(4)]
+        for th in threads:
+            th.start()
+        time.sleep(0.5)                     # load flowing through both
+        snap = fab.drain_worker(0)          # drain mid-load
+        assert snap["inflight"] == 0.0      # finished, not cancelled
+        time.sleep(0.5)                     # load continues on worker 1
+        stop.set()
+        for th in threads:
+            th.join(timeout=10.0)
+        assert results["err"] == []         # ZERO lost requests
+        assert results["ok"] > 20
+        # the drained worker took no traffic after the drain settled
+        assert fab.router.stats()["routable_workers"] == 1.0
+        # ...and a restarted worker rejoins and serves again
+        fab.restart_worker(0)
+        assert fab.router.stats()["routable_workers"] == 2.0
+        assert fab.router.rank_batch(["rejoined"])[0]
+
+
+@pytest.mark.slow
+def test_crashed_worker_is_respawned_and_rejoins():
+    with Fabric(n_workers=2, backend="numpy", train_steps=1,
+                probe_interval_s=0.02) as fab:
+        victim = fab.workers[0]
+        first_pid = victim.proc.pid
+        victim.proc.kill()                  # hard crash, NOT expect_exit
+        deadline = time.time() + 60.0
+        while fab.respawns == 0 and time.time() < deadline:
+            time.sleep(0.05)
+        assert fab.respawns >= 1, "supervisor never respawned the worker"
+        assert victim.alive and victim.proc.pid != first_pid
+        # the respawned worker answers through the router again
+        deadline = time.time() + 10.0
+        while (fab.router.stats()["routable_workers"] < 2.0
+               and time.time() < deadline):
+            time.sleep(0.05)
+        assert fab.router.stats()["routable_workers"] == 2.0
+        assert fab.router.rank_batch(["after respawn"])[0]
+
+
+# ------------------------------------------------------------- unit-level --
+
+def test_worker_command_shape():
+    w = FabricWorker(3, backend="jit", train_steps=7, workers=4,
+                     max_queue=128)
+    cmd = w.command()
+    assert "--serve-pipeline" in cmd
+    assert cmd[cmd.index("--backend") + 1] == "jit"
+    assert cmd[cmd.index("--train-steps") + 1] == "7"
+    assert cmd[cmd.index("--port") + 1] == "0"
+    assert "-u" in cmd                      # unbuffered: READY must flush
+
+
+def test_health_router_prefers_less_loaded_worker():
+    class _FakeEndpoint:
+        def __init__(self, slot):
+            self.slot = slot
+            self.client = object()
+
+        def close(self):
+            pass
+
+    router = HealthRouter([_FakeEndpoint(0), _FakeEndpoint(1),
+                           _FakeEndpoint(2)])
+    router._snaps = {
+        0: {"queue_depth": 50.0, "inflight": 2.0, "draining": 0.0},
+        1: {"queue_depth": 0.0, "inflight": 0.0, "draining": 0.0},
+        2: {"queue_depth": 8.0, "inflight": 1.0, "draining": 0.0},
+    }
+    primary, backup = router._pick_endpoints()
+    assert primary == 1                     # idle worker wins
+    assert backup == 2                      # next least-loaded hedges
+    # Draining workers drop out of routing entirely.
+    router._snaps[1]["draining"] = 1.0
+    primary, backup = router._pick_endpoints()
+    assert primary == 2 and backup == 0
+    # Dead workers too — and with nobody routable we fall back to
+    # round-robin over everything rather than stalling.
+    router._snaps[0]["draining"] = 1.0
+    router._alive[2] = False
+    primary, backup = router._pick_endpoints()
+    assert primary in (0, 1, 2) and backup is not None
+
+
+def test_health_router_spreads_ties_round_robin():
+    class _FakeEndpoint:
+        def __init__(self, slot):
+            self.client = object()
+
+        def close(self):
+            pass
+
+    router = HealthRouter([_FakeEndpoint(0), _FakeEndpoint(1)])
+    router._snaps = {
+        0: {"queue_depth": 0.0, "inflight": 0.0, "draining": 0.0},
+        1: {"queue_depth": 0.0, "inflight": 0.0, "draining": 0.0},
+    }
+    primaries = {router._pick_endpoints()[0] for _ in range(4)}
+    assert primaries == {0, 1}              # an idle fleet still spreads

@@ -213,3 +213,33 @@ def test_batches_stat_is_monotonic_not_windowed():
         assert stats["mean_batch"] == 1.0       # window still feeds the mean
     finally:
         mb.stop()
+
+
+def test_cold_start_default_delay_prevents_hedge_storm():
+    """Regression: with an EMPTY tracker the adaptive p95 is 0.0, so
+    without the min-samples floor every request would hedge immediately
+    (doubling fleet load from the first request). The cold transport must
+    use the fixed default delay and never hedge fast requests."""
+    a = _StubTransport("a", 1, delay_s=0.005)
+    b = _StubTransport("b", 2, delay_s=0.005)
+    ht = HedgedTransport([a, b], default_hedge_s=0.05, min_samples=16)
+    assert ht.tracker.percentile(0.95) == 0.0   # degenerate adaptive value
+    assert ht.hedge_delay_s() == pytest.approx(0.05)
+    for _ in range(8):                          # still below min_samples
+        ht.rank_batch(["q"])
+    s = ht.stats()
+    assert s["hedged"] == 0.0                   # 5ms stubs never hit 50ms
+    assert a.calls + b.calls == 8               # no duplicate dispatches
+
+
+def test_warmed_tracker_switches_from_default_to_adaptive():
+    a = _StubTransport("a", 1)
+    b = _StubTransport("b", 2)
+    ht = HedgedTransport([a, b], min_samples=4, default_hedge_s=0.2,
+                         min_hedge_s=0.001)
+    for i in range(4):
+        assert ht.hedge_delay_s() == pytest.approx(0.2)   # still cold
+        ht.rank_batch(["q"])
+    # Warm: the delay is now the observed p95 (clamped), not the default.
+    assert ht.hedge_delay_s() < 0.2
+    assert ht.hedge_delay_s() >= 0.001

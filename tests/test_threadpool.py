@@ -204,3 +204,77 @@ def test_client_context_manager_and_reconnect():
     with pytest.raises((ConnectionError, OSError)):
         cl2.get_score("q", "a")
     srv.stop()
+
+
+# ---------------------------------------------- v4 health + graceful drain --
+
+def test_health_probe_reports_load_and_drain_state():
+    srv = SV.ThreadPoolServer(SlowHandler(0.0), num_workers=2,
+                              admission=AdmissionController(
+                                  max_queue_rows=64)).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            h = cl.health()
+            assert h["draining"] == 0.0
+            assert h["inflight"] == 0.0
+            assert h["queue_depth"] == 0.0
+            assert h["row_service_ms"] > 0.0
+    finally:
+        srv.stop()
+
+
+def test_drain_sheds_new_work_then_resume_recovers():
+    srv = SV.ThreadPoolServer(SlowHandler(0.0),
+                              num_workers=2).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            assert cl.get_score("q", "a") == 0.0
+            ack = cl.drain()
+            assert ack["draining"] == 1.0
+            with pytest.raises(wire.ShedError, match="draining"):
+                cl.get_score("q", "a")
+            # health still answers while draining (probes must see it)
+            assert cl.health()["draining"] == 1.0
+            srv.resume()
+            assert cl.get_score("q", "a") == 0.0
+    finally:
+        srv.stop()
+
+
+def test_drain_waits_for_inflight_work():
+    """drain() returns only once in-flight requests finished — nothing is
+    cancelled, nothing lost."""
+    srv = SV.ThreadPoolServer(SlowHandler(0.15),
+                              num_workers=2).start_background()
+    try:
+        result = {}
+
+        def call():
+            with SV.Client(srv.address) as cl:
+                result["score"] = cl.get_score("q", "a")
+
+        th = threading.Thread(target=call)
+        th.start()
+        deadline = time.time() + 2.0
+        while srv.state.inflight == 0 and time.time() < deadline:
+            time.sleep(0.005)        # wait until the request is in flight
+        assert srv.state.inflight == 1
+        assert srv.drain(timeout_s=5.0)          # blocks until it finishes
+        assert srv.state.inflight == 0
+        th.join(timeout=2.0)
+        assert result["score"] == 0.0            # the in-flight call WON
+    finally:
+        srv.stop()
+
+
+def test_simple_server_drain_and_resume():
+    srv = SV.SimpleServer(SlowHandler(0.0)).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            assert cl.drain()["draining"] == 1.0
+            with pytest.raises(wire.ShedError, match="draining"):
+                cl.get_score("q", "a")
+            srv.resume()
+            assert cl.get_score("q", "a") == 0.0
+    finally:
+        srv.stop()

@@ -338,3 +338,68 @@ def test_fuzz_truncation_only_raises_value_error(frame, decoder):
             decoder(t, payload[:cut])
         except ValueError:
             pass
+
+
+# ------------------------------------------- v4 control frames (health/drain)
+
+def test_health_request_roundtrip():
+    t, payload = _frame_parts(wire.encode_health())
+    assert t == wire.MSG_HEALTH
+    assert wire.decode_control_request(t, payload) is None
+
+
+def test_drain_request_roundtrip_with_deadline():
+    t, payload = _frame_parts(wire.encode_drain(deadline_s=0.25))
+    assert t == wire.MSG_DRAIN
+    assert wire.decode_control_request(t, payload) == pytest.approx(0.25)
+
+
+def test_control_request_wrong_type_raises():
+    _, payload = _frame_parts(wire.encode_health())
+    with pytest.raises(ValueError, match="control msg type"):
+        wire.decode_control_request(wire.MSG_GET_SCORE, payload)
+
+
+def test_reply_health_roundtrip():
+    stats = {"queue_depth": 12.0, "row_service_ms": 1.5,
+             "inflight": 3.0, "draining": 0.0}
+    t, payload = _frame_parts(wire.encode_reply_health(stats))
+    assert t == wire.MSG_REPLY_HEALTH
+    assert wire.decode_reply_health(t, payload) == stats
+
+
+def test_reply_health_empty_roundtrip():
+    t, payload = _frame_parts(wire.encode_reply_health({}))
+    assert wire.decode_reply_health(t, payload) == {}
+
+
+def test_reply_health_shed_and_error_raise_like_scores():
+    t, payload = _frame_parts(wire.encode_shed("draining"))
+    with pytest.raises(wire.ShedError, match="draining"):
+        wire.decode_reply_health(t, payload)
+    t, payload = _frame_parts(wire.encode_error("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        wire.decode_reply_health(t, payload)
+    with pytest.raises(ValueError, match="health reply"):
+        wire.decode_reply_health(wire.MSG_REPLY_SCORE, b"\x00" * 8)
+
+
+def test_reply_health_hostile_count_raises():
+    payload = struct.pack("<I", 1 << 30)   # claims 2^30 entries, no body
+    with pytest.raises(ValueError, match="health entry"):
+        wire.decode_reply_health(wire.MSG_REPLY_HEALTH, payload)
+
+
+@pytest.mark.parametrize("frame,decoder", [
+    (wire.encode_health(0.5),
+     lambda t, p: wire.decode_control_request(t, p)),
+    (wire.encode_reply_health({"queue_depth": 2.0, "inflight": 1.0}),
+     lambda t, p: wire.decode_reply_health(t, p)),
+])
+def test_fuzz_truncated_v4_frames_only_raise_value_error(frame, decoder):
+    t, payload = frame[4], frame[5:]
+    for cut in range(len(payload)):
+        try:
+            decoder(t, payload[:cut])
+        except ValueError:
+            pass
