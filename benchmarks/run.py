@@ -10,29 +10,54 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import time
+
+
+def snapshot_meta() -> dict:
+    """Provenance stamped onto every JSON row: which commit, when, and on
+    how many cores the numbers were taken — so two BENCH_*.json files are
+    comparable (or visibly not, e.g. different host_cores)."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=os.path.dirname(os.path.abspath(__file__)),
+                             ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    return {
+        "git_sha": sha,
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "host_cores": float(os.cpu_count() or 1),
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table", default="all",
                     choices=["all", "1", "2", "e2e", "pipeline_plans",
-                             "loadgen", "fabric", "roofline"])
+                             "loadgen", "fabric", "roofline", "trace"])
     ap.add_argument("--processes", default="1,2,4", metavar="N,N,...",
                     help="worker-process counts for --table fabric")
     ap.add_argument("--naive", action="store_true",
                     help="include the naive per-filter conv condition")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows as a JSON list")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="for --table trace: also export the collected "
+                         "spans as Chrome trace-event JSON (Perfetto)")
     args = ap.parse_args()
 
     from benchmarks import (e2e_pipeline, loadgen, pipeline_plans,
                             roofline_table, table1_feedforward,
-                            table2_service)
+                            table2_service, trace_table)
     from benchmarks.common import build_world
 
     rows = []
     world = None
-    if args.table in ("all", "1", "2", "e2e", "pipeline_plans", "loadgen"):
+    if args.table in ("all", "1", "2", "e2e", "pipeline_plans", "loadgen",
+                      "trace"):
         world = build_world()
     if args.table in ("all", "1"):
         rows += table1_feedforward.run(batch=1, world=world, naive=args.naive)
@@ -54,14 +79,23 @@ def main() -> None:
             tuple(int(x) for x in args.processes.split(",")))
     if args.table in ("all", "roofline"):
         rows += roofline_table.run()
+    if args.table == "trace":
+        # Not in "all": it stands up its own served pipeline and toggles
+        # the process-wide tracer for the overhead measurement.
+        rows += trace_table.run(world=world, trace_out=args.trace_out)
 
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     if args.json:
+        meta = snapshot_meta()
+        for r in rows:
+            r.update(meta)
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2, sort_keys=True)
-        print(f"# wrote {len(rows)} rows to {args.json}")
+        print(f"# wrote {len(rows)} rows to {args.json} "
+              f"(sha={meta['git_sha']} utc={meta['utc']} "
+              f"cores={meta['host_cores']:g})")
 
 
 if __name__ == "__main__":

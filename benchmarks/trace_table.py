@@ -1,0 +1,123 @@
+"""Per-stage latency table from the tracing fabric, plus telemetry overhead.
+
+Two measurements:
+
+  * ``trace/<span>`` rows — fire a query batch through a *served* pipeline
+    (``ThreadPoolServer`` over a ``PipelineEngine`` whose rerank dispatches
+    into an in-process ``ReplicaPool``), so one request traverses the full
+    instrumented path: client RPC -> server dispatch -> admission ->
+    plan stages -> micro-batcher queue/compute -> scorer. The finished
+    spans are aggregated by name (``telemetry.stage_breakdown``): the
+    answer to "where did this query's time go", as a table.
+  * ``trace/overhead`` row — the pipeline_plans batched measurement run
+    with tracing disabled vs enabled; derived reports the relative cost of
+    the instrumentation itself (acceptance target: < 5%).
+
+  PYTHONPATH=src python -m benchmarks.trace_table
+  PYTHONPATH=src python -m benchmarks.run --table trace --trace-out t.json
+"""
+from __future__ import annotations
+
+import gc
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import build_world
+from repro.core import backends as BK
+from repro.core import ops
+from repro.core import service as SV
+from repro.core.plan import PlanContext, plan
+from repro.serving import telemetry
+
+BATCH = 32
+
+
+def _pipeline(scorer):
+    return ops.Retrieve(h=10) >> ops.Rerank(scorer, k=5)
+
+
+def run(world=None, backend: str = "jit", n_queries: int = 60,
+        trace_out: Optional[str] = None, overhead_reps: int = 3
+        ) -> List[Dict]:
+    cfg, params, corpus, tok, index, _ = world or build_world()
+    queries = corpus.questions[:n_queries]
+    measured, warm = queries[:BATCH], queries[BATCH:]
+
+    scorer = BK.make_scorer(backend, params, cfg, buckets=(64, 256, 1024))
+    for b in (64, 256, 1024):           # precompile: no jit in timed loops
+        scorer(np.zeros((b, cfg.max_len), np.int32),
+               np.zeros((b, cfg.max_len), np.int32),
+               np.zeros((b, 4), np.float32))
+    pipeline = _pipeline(scorer)
+
+    # ---- served path: every hop of the request is instrumented ----------
+    from repro.serving.cluster import ReplicaPool
+    from repro.serving.engine import PipelineEngine
+    pool = ReplicaPool.build(backend, params, cfg, tok, corpus.idf,
+                             n_replicas=2, buckets=(64, 256, 1024),
+                             policy="least_outstanding")
+    engine = PipelineEngine(
+        pipeline, PlanContext.from_world(cfg, params, corpus, tok, index,
+                                         remote=pool),
+        target="remote")
+    srv = SV.ThreadPoolServer(engine).start_background()
+    rows: List[Dict] = []
+    try:
+        with SV.Client(srv.address) as client:
+            client.rank_batch(list(warm))
+            telemetry.reset_all()       # keep only the measured traffic
+            for q in measured:
+                client.rank_batch([q])  # one trace per query
+        spans = telemetry.get_tracer().finished()
+        if trace_out:
+            n = telemetry.export_chrome_trace(trace_out, spans)
+            print(f"# wrote {n} trace events to {trace_out}")
+        for name, agg in sorted(telemetry.stage_breakdown(spans).items()):
+            rows.append({
+                "name": f"trace/{name}",
+                "us_per_call": 1e3 * agg["mean_ms"],
+                "derived": (f"count={int(agg['count'])}"
+                            f" total_ms={agg['total_ms']:.1f}"),
+            })
+    finally:
+        srv.stop()
+        pool.stop()
+
+    # ---- instrumentation overhead on the batched plan -------------------
+    # Mirrors the pipeline_plans jit-batched measurement: same pipeline,
+    # fresh context per condition (so neither warms the other's caches),
+    # identical warm/measured query split, tracing toggled process-wide.
+    tracer = telemetry.get_tracer()
+    timings: Dict[str, float] = {}
+    plans = {}
+    try:
+        for mode in ("off", "on"):
+            ctx = PlanContext.from_world(cfg, params, corpus, tok, index)
+            plans[mode] = plan(pipeline, "batched", ctx)
+            plans[mode].run_many(warm)
+            tracer.set_enabled(mode == "on")
+            gc.collect()
+            t0 = time.perf_counter()
+            for _ in range(overhead_reps):
+                plans[mode].run_many(measured)
+            timings[mode] = time.perf_counter() - t0
+    finally:
+        tracer.set_enabled(True)
+        for p in plans.values():
+            p.close()
+    overhead = timings["on"] / timings["off"] - 1.0
+    rows.append({
+        "name": f"trace/overhead-{backend}-batched",
+        "us_per_call": (1e6 * timings["on"]
+                        / (overhead_reps * len(measured))),
+        "derived": (f"overhead={100 * overhead:+.1f}%"
+                    f" off_us={1e6 * timings['off'] / (overhead_reps * len(measured)):.1f}"),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -3,18 +3,20 @@
 # plus the fabric process-scaling sweep and drop the machine-readable rows
 # at the repo root, so the perf trajectory accumulates one JSON per PR.
 #
-#   scripts/bench_snapshot.sh            # writes BENCH_pr6.json
-#   scripts/bench_snapshot.sh pr7        # writes BENCH_pr7.json
+#   scripts/bench_snapshot.sh            # writes BENCH_pr7.json
+#   scripts/bench_snapshot.sh pr8        # writes BENCH_pr8.json
 #   PROCESSES=1,2 scripts/bench_snapshot.sh   # smaller fabric sweep
 #
 # The snapshot covers the four execution plans (local / batched / remote /
 # remote_pipeline) with qps + speedup columns, then appends the
-# loadgen --processes rows (N worker processes behind the fabric router;
-# each row records host_cores — interpret scaling against it). Compare
-# files across PRs to catch regressions.
+# loadgen --processes rows (N worker processes behind the fabric router).
+# Every row is stamped with git_sha / utc / host_cores by benchmarks.run,
+# so two snapshots are attributable and comparable — diff them with
+# scripts/compare_bench.py (scripts/tier1.sh runs the diff of the two
+# newest snapshots as a non-fatal advisory after a green suite).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-tag="${1:-pr6}"
+tag="${1:-pr7}"
 out="BENCH_${tag}.json"
 procs="${PROCESSES:-1,2,4}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

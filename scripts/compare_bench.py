@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Diff two BENCH_*.json snapshots and flag perf regressions.
+
+  python scripts/compare_bench.py BENCH_pr6.json BENCH_pr7.json
+  python scripts/compare_bench.py --threshold 0.1 old.json new.json
+
+Rows are matched by ``name``; for each match the us_per_call delta is
+printed, and any row that got slower by more than ``--threshold``
+(default 20%) is flagged as a REGRESSION. Rows present in only one file
+are listed but never flagged (new benchmarks are not regressions).
+
+Exit code: 0 if clean, 1 if any regression was flagged — callers decide
+whether that is fatal (``scripts/tier1.sh`` runs it as a non-fatal
+advisory, since benchmark noise on loaded CI hosts is real; the snapshot
+rows carry git_sha/utc/host_cores so a suspicious diff can be re-taken
+and attributed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def load_rows(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: expected a JSON list of benchmark rows")
+    return {r["name"]: r for r in rows if "name" in r}
+
+
+def compare(old: Dict[str, dict], new: Dict[str, dict],
+            threshold: float) -> List[str]:
+    """Return the list of regression lines (empty = clean); prints the
+    full comparison table as a side effect."""
+    regressions: List[str] = []
+    names = sorted(set(old) | set(new))
+    width = max((len(n) for n in names), default=4)
+    print(f"{'name':<{width}}  {'old_us':>10}  {'new_us':>10}  {'delta':>8}")
+    for name in names:
+        o, n = old.get(name), new.get(name)
+        if o is None or n is None:
+            tag = "new" if o is None else "removed"
+            old_s = "-" if o is None else f"{o['us_per_call']:.1f}"
+            new_s = "-" if n is None else f"{n['us_per_call']:.1f}"
+            print(f"{name:<{width}}  {old_s:>10}  {new_s:>10}  {tag:>8}")
+            continue
+        old_us, new_us = o["us_per_call"], n["us_per_call"]
+        if old_us <= 0:
+            continue
+        delta = new_us / old_us - 1.0
+        flag = ""
+        if delta > threshold:
+            flag = "  REGRESSION"
+            regressions.append(
+                f"{name}: {old_us:.1f}us -> {new_us:.1f}us "
+                f"({100 * delta:+.1f}%)")
+        print(f"{name:<{width}}  {old_us:>10.1f}  {new_us:>10.1f}  "
+              f"{100 * delta:>+7.1f}%{flag}")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json benchmark snapshots")
+    ap.add_argument("old", help="baseline snapshot (e.g. BENCH_pr6.json)")
+    ap.add_argument("new", help="candidate snapshot (e.g. BENCH_pr7.json)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative us_per_call slowdown to flag "
+                         "(0.2 = 20%%)")
+    args = ap.parse_args()
+
+    old, new = load_rows(args.old), load_rows(args.new)
+    for label, rows in (("old", old), ("new", new)):
+        any_row = next(iter(rows.values()), {})
+        sha = any_row.get("git_sha", "?")
+        utc = any_row.get("utc", "?")
+        cores = any_row.get("host_cores", "?")
+        print(f"# {label}: {len(rows)} rows  sha={sha}  utc={utc}  "
+              f"cores={cores}")
+    regressions = compare(old, new, args.threshold)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) over "
+              f"{100 * args.threshold:.0f}%:")
+        for line in regressions:
+            print("  " + line)
+        return 1
+    print("\nno regressions flagged")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

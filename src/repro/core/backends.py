@@ -15,6 +15,7 @@ measure integration overhead, not model differences.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable, Dict, Sequence
 
 import jax
@@ -24,6 +25,7 @@ import numpy as np
 from repro.configs.base import TextPairConfig
 from repro.core import compiled_artifact, export as export_lib, numpy_eval
 from repro.models import sm_cnn
+from repro.serving import telemetry
 
 BACKENDS = ("eager", "jit", "aot", "numpy", "pallas", "artifact")
 
@@ -56,7 +58,21 @@ class Scorer:
             q_tok = np.concatenate([q_tok, np.zeros((pad,) + q_tok.shape[1:], q_tok.dtype)])
             a_tok = np.concatenate([a_tok, np.zeros((pad,) + a_tok.shape[1:], a_tok.dtype)])
             feats = np.concatenate([feats, np.zeros((pad,) + feats.shape[1:], feats.dtype)])
-        out = np.asarray(self._fn(q_tok, a_tok, feats))
+        tracer = telemetry.get_tracer()
+        # Only open a kernel-side span when this call is already inside a
+        # request trace (e.g. the batcher adopted the batch's context);
+        # untraced benchmark loops should not flood the ring with roots.
+        if tracer.current_context() is not None:
+            with tracer.span("scorer", backend=self.name, rows=n, bucket=b):
+                t0 = time.perf_counter()
+                out = np.asarray(self._fn(q_tok, a_tok, feats))
+                dt_ms = (time.perf_counter() - t0) * 1e3
+        else:
+            t0 = time.perf_counter()
+            out = np.asarray(self._fn(q_tok, a_tok, feats))
+            dt_ms = (time.perf_counter() - t0) * 1e3
+        telemetry.get_registry().observe("scorer_batch_ms", dt_ms,
+                                         backend=self.name, bucket=b)
         return out[:n]
 
 

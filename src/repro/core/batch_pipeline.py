@@ -77,49 +77,69 @@ class BatchedMultiStageRanker:
         return self.run_batch([query])[0]
 
     def run_batch(self, queries: Sequence[str]) -> List[QueryResult]:
+        from repro.serving import telemetry
+        tracer = telemetry.get_tracer()
         states: List[Optional[List[Candidate]]] = [None] * len(queries)
         traces: List[List[StageResult]] = [[] for _ in queries]
         for stage in self.stages:
-            if isinstance(stage, RerankStage):
-                self._run_rerank_coalesced(stage, queries, states, traces)
-            elif hasattr(stage, "run_batch"):   # e.g. RetrievalStage: one
-                t0 = time.perf_counter()        # coalesced BM25 scoring call
-                outs = stage.run_batch(queries, states)
-                per_query = (time.perf_counter() - t0) / max(len(queries), 1)
-                for i, out in enumerate(outs):
-                    states[i] = out
-                    traces[i].append(StageResult(stage.name, out, per_query))
-            else:
-                for i, q in enumerate(queries):
-                    t0 = time.perf_counter()
-                    states[i] = stage.run(q, states[i])
-                    traces[i].append(StageResult(
-                        stage.name, states[i], time.perf_counter() - t0))
+            # One span per stage for the whole coalesced batch (the work IS
+            # batch-wide); per-query amortized time stays in the StageResult
+            # trace so the two views agree on totals.
+            with tracer.span(f"stage.{stage.name}", queries=len(queries)):
+                if isinstance(stage, RerankStage):
+                    self._run_rerank_coalesced(stage, queries, states,
+                                               traces)
+                elif hasattr(stage, "run_batch"):   # e.g. RetrievalStage:
+                    t0 = time.perf_counter()        # one coalesced BM25 call
+                    outs = stage.run_batch(queries, states)
+                    per_query = (time.perf_counter() - t0) / max(
+                        len(queries), 1)
+                    for i, out in enumerate(outs):
+                        states[i] = out
+                        traces[i].append(StageResult(stage.name, out,
+                                                     per_query))
+                else:
+                    for i, q in enumerate(queries):
+                        t0 = time.perf_counter()
+                        states[i] = stage.run(q, states[i])
+                        traces[i].append(StageResult(
+                            stage.name, states[i],
+                            time.perf_counter() - t0))
         return [(cands or [], trace) for cands, trace in zip(states, traces)]
 
     def _run_rerank_coalesced(self, stage: RerankStage,
                               queries: Sequence[str],
                               states: List[Optional[List[Candidate]]],
                               traces: List[List[StageResult]]) -> None:
+        from repro.serving import telemetry
         t0 = time.perf_counter()
         cache = self._cache_for(stage)
         # gather the cross-query work list; queries with no candidates keep
         # the sequential contract (an empty StageResult, no scorer row)
         active = [i for i, c in enumerate(states) if c]
         segments: List[Tuple[int, int]] = []   # (query index, n candidates)
-        q_rows, a_rows, pairs = [], [], []
-        for i in active:
-            cands = states[i]
-            q_row = cache.query_row(queries[i])       # encoded ONCE per query
-            for c in cands:
-                q_rows.append(q_row)
-                a_rows.append(cache.answer_row(c.text))
-                pairs.append((queries[i], c.text))
-            segments.append((i, len(cands)))
+        with telemetry.get_tracer().span("featurize") as feat_span:
+            before = cache.stats()
+            q_rows, a_rows, pairs = [], [], []
+            for i in active:
+                cands = states[i]
+                q_row = cache.query_row(queries[i])   # encoded ONCE per query
+                for c in cands:
+                    q_rows.append(q_row)
+                    a_rows.append(cache.answer_row(c.text))
+                    pairs.append((queries[i], c.text))
+                segments.append((i, len(cands)))
+            feats = (cache.pair_feats_many(pairs) if q_rows
+                     else np.zeros((0, 4), np.float32))
+            after = cache.stats()
+            feat_span.set_attr("rows", len(pairs))
+            feat_span.set_attr("hits", int(after["feat_cache_hits"]
+                                           - before["feat_cache_hits"]))
+            feat_span.set_attr("misses", int(after["feat_cache_misses"]
+                                             - before["feat_cache_misses"]))
 
         if q_rows:
-            scores = stage.scorer(np.stack(q_rows), np.stack(a_rows),
-                                  cache.pair_feats_many(pairs))
+            scores = stage.scorer(np.stack(q_rows), np.stack(a_rows), feats)
         else:
             scores = np.zeros((0,), np.float32)
 

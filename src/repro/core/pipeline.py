@@ -166,11 +166,15 @@ class MultiStageRanker:
         self.stages = list(stages)
 
     def run(self, query: str) -> Tuple[List[Candidate], List[StageResult]]:
+        from repro.serving import telemetry
+        tracer = telemetry.get_tracer()
         candidates: Optional[List[Candidate]] = None
         trace = []
         for stage in self.stages:
             t0 = time.perf_counter()
-            candidates = stage.run(query, candidates)
+            with tracer.span(f"stage.{stage.name}") as sp:
+                candidates = stage.run(query, candidates)
+                sp.set_attr("out", len(candidates or ()))
             trace.append(StageResult(stage.name, candidates,
                                      time.perf_counter() - t0))
         return candidates or [], trace

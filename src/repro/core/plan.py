@@ -600,12 +600,19 @@ class ExecutionPlan:
         return ""    # ranking against a corpus this context doesn't bind
 
     def _run_remote_pipeline(self, queries: Sequence[str]):
+        from repro.serving import telemetry
         queries = list(queries)
         chunk = self.ctx.rank_chunk or len(queries) or 1
         t0 = time.perf_counter()
         rankings: List = []
-        for i in range(0, len(queries), chunk):
-            rankings.extend(self._ranker.rank_batch(queries[i:i + chunk]))
+        # One span per ranking RPC chunk: the transport underneath (Client
+        # or HedgedTransport) hangs its own client/hedge spans off this, and
+        # a v5 server continues the trace on the far side of the wire.
+        with telemetry.get_tracer().span("plan.remote_pipeline",
+                                         queries=len(queries)):
+            for i in range(0, len(queries), chunk):
+                rankings.extend(
+                    self._ranker.rank_batch(queries[i:i + chunk]))
         if len(rankings) != len(queries):
             raise ValueError(f"ranking reply held {len(rankings)} rankings "
                              f"for {len(queries)} queries")

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import wire
 from repro.core.backends import Scorer
 from repro.data.tokenizer import HashingTokenizer, overlap_features
+from repro.serving import telemetry
 from repro.serving.admission import SHED_DRAINING, SHED_EXPIRED, SHED_TOO_LARGE
 
 #: Per-connection socket timeout: bounds how long a silent client can hold
@@ -95,6 +96,27 @@ def _health_snapshot(handler, admission, state) -> Dict[str, float]:
     return s
 
 
+def _stats_snapshot(handler, admission, state
+                    ) -> Tuple[Dict[str, float], List[wire.WireSpan]]:
+    """The MSG_REPLY_STATS payload: the process-wide MetricsRegistry
+    snapshot (batcher queue-wait/compute histograms, admission counters,
+    scorer batch sizes — everything instrumented code recorded), prefixed
+    health fields, any legacy ``handler.stats()`` numerics, plus the
+    tracer's recent finished spans so a supervisor can assemble
+    cross-process span trees."""
+    metrics = telemetry.get_registry().snapshot()
+    for key, value in _health_snapshot(handler, admission, state).items():
+        metrics[f"health_{key}"] = value
+    stats = getattr(handler, "stats", None)
+    if callable(stats):
+        for key, value in stats().items():
+            try:
+                metrics.setdefault(f"handler_{key}", float(value))
+            except (TypeError, ValueError):
+                continue   # non-numeric legacy stat: not wire-shippable
+    return metrics, telemetry.get_tracer().wire_spans()
+
+
 class QuestionAnsweringHandler:
     """getScore(question, answer) -> double, over a Scorer backend."""
 
@@ -147,16 +169,20 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
             break              # trustworthy past this point — drop it
         if not t:
             break              # clean EOF
-        if t in (wire.MSG_HEALTH, wire.MSG_DRAIN):
+        if t in (wire.MSG_HEALTH, wire.MSG_DRAIN, wire.MSG_STATS):
             try:
                 wire.decode_control_request(t, payload)
             except Exception as e:  # noqa: BLE001 — malformed request
                 frame = wire.encode_error(str(e))
             else:
-                if t == wire.MSG_DRAIN and state is not None:
-                    state.draining.set()
-                frame = wire.encode_reply_health(
-                    _health_snapshot(handler, admission, state))
+                if t == wire.MSG_STATS:
+                    frame = wire.encode_reply_stats(
+                        *_stats_snapshot(handler, admission, state))
+                else:
+                    if t == wire.MSG_DRAIN and state is not None:
+                        state.draining.set()
+                    frame = wire.encode_reply_health(
+                        _health_snapshot(handler, admission, state))
             try:
                 conn.sendall(frame)
             except OSError:
@@ -165,112 +191,127 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
         is_rank = t in (wire.MSG_RANK, wire.MSG_RANK_BATCH)
         try:
             if is_rank:
-                queries, deadline_s = wire.decode_rank_request(t, payload)
+                queries, deadline_s, t_ctx = wire.decode_rank_request_meta(
+                    t, payload)
                 pairs = ()
             else:
-                pairs, deadline_s = wire.decode_request_ex(t, payload)
+                pairs, deadline_s, t_ctx = wire.decode_request_meta(
+                    t, payload)
         except Exception as e:  # noqa: BLE001 — malformed request
             try:
                 conn.sendall(wire.encode_error(str(e)))
             except OSError:
                 break
             continue
-        if state is not None and state.draining.is_set():
-            # Graceful drain: in-flight work finishes, new work is shed
-            # retriably — another replica (or the respawned worker) takes
-            # the retry. Routers stop routing here via the health flag.
-            try:
-                conn.sendall(wire.encode_shed(SHED_DRAINING))
-            except OSError:
-                break
-            continue
-        if is_rank and not hasattr(handler, "rank_batch"):
-            # v3 ranking request against a pair-scoring-only deployment:
-            # a typed protocol error, not a dropped connection.
-            try:
-                conn.sendall(wire.encode_error(
+        tracer = telemetry.get_tracer()
+        registry = telemetry.get_registry()
+        kind = "rank" if is_rank else "score"
+        registry.inc("server_requests", type=kind)
+        # A v5 frame's trace context makes this server span a CHILD of the
+        # caller's client span: one trace tree across the process boundary.
+        parent = (telemetry.SpanContext(*t_ctx) if t_ctx is not None
+                  else None)
+        with tracer.span(f"server.{kind}", parent=parent) as srv_span:
+            reply: Optional[bytes] = None
+            if state is not None and state.draining.is_set():
+                # Graceful drain: in-flight work finishes, new work is shed
+                # retriably — another replica (or the respawned worker)
+                # takes the retry. Routers stop routing here via the health
+                # flag.
+                srv_span.set_attr("shed", SHED_DRAINING)
+                reply = wire.encode_shed(SHED_DRAINING)
+            elif is_rank and not hasattr(handler, "rank_batch"):
+                # v3 ranking request against a pair-scoring-only deployment:
+                # a typed protocol error, not a dropped connection.
+                reply = wire.encode_error(
                     "handler serves pair scoring only (no rank_batch); "
-                    "deploy a pipeline handler for MSG_RANK"))
-            except OSError:
-                break
-            continue
-        # Admission sizing: pair requests are their own row count; ranking
-        # requests expand server-side into up to rows_per_query candidate
-        # pairs per query.
-        if is_rank:
-            n_rows = len(queries) * max(
-                int(getattr(handler, "rows_per_query", 1)), 1)
-        else:
-            n_rows = len(pairs)
-        # The wire deadline is a relative budget (no cross-host clock), so
-        # the clock can only start when the frame is read: time spent in
-        # the kernel/connection queues before this point must be burned
-        # from the budget client-side (see benchmarks/loadgen.py) — a
-        # non-positive remaining budget sheds as "expired" here.
-        arrival = time.perf_counter()
-        deadline_abs = (arrival + deadline_s if deadline_s is not None
-                        else None)
-        if admission is not None:
-            reason = admission.try_admit(n_rows, deadline_abs,
-                                         now=arrival)
-            if reason is not None:
-                # Back-pressure sheds are retriable MSG_SHED; a request
-                # that alone exceeds the queue bound never will be — make
-                # that a hard error so a backoff-and-retry client doesn't
-                # livelock on it.
-                if reason == SHED_TOO_LARGE:
-                    frame = wire.encode_error(
-                        f"request of {n_rows} rows exceeds admission "
-                        f"bound {admission.max_queue_rows}")
-                else:
-                    frame = wire.encode_shed(reason)
-                try:
-                    conn.sendall(frame)
-                except OSError:
-                    break
-                continue
-        if state is not None:
-            state.enter()
-        try:
-            try:
-                # Handlers that opt in (supports_deadline, e.g. ReplicaPool)
-                # get the absolute deadline so their MicroBatcher can still
-                # drop the request at dequeue if it expires while queued —
-                # surfaced as a ShedError and answered with MSG_SHED below.
-                wants_deadline = getattr(handler, "supports_deadline", False)
+                    "deploy a pipeline handler for MSG_RANK")
+            else:
+                # Admission sizing: pair requests are their own row count;
+                # ranking requests expand server-side into up to
+                # rows_per_query candidate pairs per query.
                 if is_rank:
-                    if wants_deadline:
-                        rankings = handler.rank_batch(
-                            queries, deadline_abs=deadline_abs)
-                    else:
-                        rankings = handler.rank_batch(queries)
-                    reply = wire.encode_reply_ranking(rankings)
+                    n_rows = len(queries) * max(
+                        int(getattr(handler, "rows_per_query", 1)), 1)
                 else:
-                    if wants_deadline:
-                        scores = handler.get_scores(
-                            pairs, deadline_abs=deadline_abs)
-                    else:
-                        scores = handler.get_scores(pairs)
-                    reply = wire.encode_reply([float(s) for s in scores])
-            finally:
+                    n_rows = len(pairs)
+                srv_span.set_attr("rows", n_rows)
+                # The wire deadline is a relative budget (no cross-host
+                # clock), so the clock can only start when the frame is
+                # read: time spent in the kernel/connection queues before
+                # this point must be burned from the budget client-side
+                # (see benchmarks/loadgen.py) — a non-positive remaining
+                # budget sheds as "expired" here.
+                arrival = time.perf_counter()
+                deadline_abs = (arrival + deadline_s
+                                if deadline_s is not None else None)
                 if admission is not None:
-                    admission.release(n_rows,
-                                      time.perf_counter() - arrival)
-                if state is not None:
-                    state.exit()
+                    with tracer.span("admission", rows=n_rows) as adm_span:
+                        reason = admission.try_admit(n_rows, deadline_abs,
+                                                     now=arrival)
+                        if reason is not None:
+                            adm_span.set_attr("shed", reason)
+                            srv_span.set_attr("shed", reason)
+                    if reason is not None:
+                        # Back-pressure sheds are retriable MSG_SHED; a
+                        # request that alone exceeds the queue bound never
+                        # will be — make that a hard error so a
+                        # backoff-and-retry client doesn't livelock on it.
+                        if reason == SHED_TOO_LARGE:
+                            reply = wire.encode_error(
+                                f"request of {n_rows} rows exceeds "
+                                f"admission bound "
+                                f"{admission.max_queue_rows}")
+                        else:
+                            reply = wire.encode_shed(reason)
+                if reply is None:
+                    if state is not None:
+                        state.enter()
+                    try:
+                        try:
+                            # Handlers that opt in (supports_deadline, e.g.
+                            # ReplicaPool) get the absolute deadline so
+                            # their MicroBatcher can still drop the request
+                            # at dequeue if it expires while queued —
+                            # surfaced as a ShedError and answered with
+                            # MSG_SHED below.
+                            wants_deadline = getattr(
+                                handler, "supports_deadline", False)
+                            if is_rank:
+                                if wants_deadline:
+                                    rankings = handler.rank_batch(
+                                        queries, deadline_abs=deadline_abs)
+                                else:
+                                    rankings = handler.rank_batch(queries)
+                                reply = wire.encode_reply_ranking(rankings)
+                            else:
+                                if wants_deadline:
+                                    scores = handler.get_scores(
+                                        pairs, deadline_abs=deadline_abs)
+                                else:
+                                    scores = handler.get_scores(pairs)
+                                reply = wire.encode_reply(
+                                    [float(s) for s in scores])
+                        finally:
+                            if admission is not None:
+                                admission.release(
+                                    n_rows,
+                                    time.perf_counter() - arrival)
+                            if state is not None:
+                                state.exit()
+                    except wire.ShedError as e:
+                        srv_span.set_attr("shed", str(e) or "shed")
+                        reply = wire.encode_shed(str(e) or "shed")
+                    except Exception as e:  # noqa: BLE001 — service edge
+                        srv_span.set_attr("error", type(e).__name__)
+                        reply = wire.encode_error(str(e))
+        # The reply ships AFTER the request span closes: a caller that
+        # reads this reply and immediately pulls MSG_STATS (or the span
+        # ring in-process) is guaranteed to see the request's span.
+        try:
             conn.sendall(reply)
         except OSError:
             break
-        except wire.ShedError as e:
-            try:
-                conn.sendall(wire.encode_shed(str(e) or "shed"))
-            except OSError:
-                break
-        except Exception as e:  # noqa: BLE001 — service boundary
-            try:
-                conn.sendall(wire.encode_error(str(e)))
-            except OSError:
-                break
 
 
 def _drain(server, timeout_s: float) -> bool:
@@ -473,18 +514,33 @@ class Client:
     budget is spent the ShedError still surfaces, so sustained overload
     remains visible instead of turning into a silent retry storm. Sheds
     retried across a client's life are counted in ``shed_retries``.
+
+    Data-plane RPCs open a ``client.<method>`` span and stamp its context
+    on the outgoing frame (wire v5 FLAG_TRACE), so the server's request
+    span — and everything under it, across the process boundary — parents
+    into the caller's trace. ``trace=False`` opts a client out (e.g. the
+    fabric's control-plane probe connections, which would otherwise flood
+    the span ring at probe frequency).
     """
 
     def __init__(self, address: Tuple[str, int], reconnect: bool = True,
                  retry_sheds: int = 0, backoff_s: float = 0.01,
-                 backoff_max_s: float = 0.5):
+                 backoff_max_s: float = 0.5, trace: bool = True):
         self.address = address
         self.reconnect = reconnect
         self.retry_sheds = retry_sheds
         self.backoff_s = backoff_s
         self.backoff_max_s = backoff_max_s
+        self.trace = trace
         self.shed_retries = 0
+        self._endpoint = f"{address[0]}:{address[1]}"
         self._sock = self._connect()
+
+    def _span(self, method: str):
+        if not self.trace:
+            return telemetry.NOOP_SPAN
+        return telemetry.get_tracer().span(f"client.{method}",
+                                           endpoint=self._endpoint)
 
     def _connect(self) -> socket.socket:
         sock = socket.create_connection(self.address)
@@ -520,6 +576,7 @@ class Client:
         except (ConnectionError, OSError):
             if not self.reconnect:
                 raise
+            telemetry.get_registry().inc("client_reconnects")
             try:
                 self._sock.close()
             except OSError:
@@ -548,24 +605,32 @@ class Client:
                                self.backoff_max_s))
                 attempt += 1
                 self.shed_retries += 1
+                telemetry.get_registry().inc("client_shed_retries")
 
     def get_score(self, question: str, answer: str,
                   deadline_s: Optional[float] = None) -> float:
-        return self._rpc_with_retry(
-            lambda b: wire.encode_get_score(question, answer, b),
-            deadline_s)[0]
+        with self._span("get_score") as sp:
+            return self._rpc_with_retry(
+                lambda b: wire.encode_get_score(question, answer, b,
+                                                trace=sp.context),
+                deadline_s)[0]
 
     def get_score_batch(self, pairs: Sequence[Tuple[str, str]],
                         deadline_s: Optional[float] = None):
-        return self._rpc_with_retry(
-            lambda b: wire.encode_get_score_batch(pairs, b), deadline_s)
+        with self._span("get_score_batch") as sp:
+            return self._rpc_with_retry(
+                lambda b: wire.encode_get_score_batch(pairs, b,
+                                                      trace=sp.context),
+                deadline_s)
 
     def rank(self, query: str, deadline_s: Optional[float] = None
              ) -> List[wire.RankedItem]:
         """v3 whole-pipeline ranking: one query in, one ranked
         (doc_id, sent_id, score) list out."""
-        out = self._rpc_with_retry(lambda b: wire.encode_rank(query, b),
-                                   deadline_s, wire.decode_reply_ranking)
+        with self._span("rank") as sp:
+            out = self._rpc_with_retry(
+                lambda b: wire.encode_rank(query, b, trace=sp.context),
+                deadline_s, wire.decode_reply_ranking)
         if not out:     # a misbehaving server must fail typed, not crash
             raise ValueError("ranking reply held no rankings for the query")
         return out[0]
@@ -575,9 +640,11 @@ class Client:
                    ) -> List[List[wire.RankedItem]]:
         """v3 whole-pipeline ranking for a query batch — ONE RPC for the
         whole batch instead of chunked per-pair scoring calls."""
-        return self._rpc_with_retry(
-            lambda b: wire.encode_rank_batch(queries, b), deadline_s,
-            wire.decode_reply_ranking)
+        with self._span("rank_batch") as sp:
+            return self._rpc_with_retry(
+                lambda b: wire.encode_rank_batch(queries, b,
+                                                 trace=sp.context),
+                deadline_s, wire.decode_reply_ranking)
 
     def health(self, deadline_s: Optional[float] = None
                ) -> Dict[str, float]:
@@ -592,6 +659,14 @@ class Client:
         snapshot — poll ``health()`` until ``inflight`` hits zero."""
         return self._rpc_with_retry(lambda b: wire.encode_drain(b), None,
                                     wire.decode_reply_health)
+
+    def stats(self, deadline_s: Optional[float] = None
+              ) -> Tuple[Dict[str, float], List[wire.WireSpan]]:
+        """v5 full telemetry pull (MSG_STATS): the server process's
+        MetricsRegistry snapshot plus its recent finished spans — what the
+        Fabric supervisor aggregates across workers."""
+        return self._rpc_with_retry(lambda b: wire.encode_stats(b),
+                                    deadline_s, wire.decode_reply_stats)
 
     def close(self):
         self._sock.close()

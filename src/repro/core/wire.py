@@ -46,6 +46,25 @@ Version history:
        work is shed with MSG_SHED "draining", in-flight requests finish)
        and acks with the same health snapshot. v1-v3 frames keep
        decoding unchanged.
+  v5 — adds distributed-tracing context and full metrics export
+       (see serving.telemetry):
+         FLAG_TRACE        header grows u64 trace_id | u64 span_id after
+                           the optional deadline; a server opens its
+                           request span as a CHILD of the caller's span,
+                           so one trace tree crosses the process boundary.
+         MSG_STATS         (header only)           -> MSG_REPLY_STATS
+         MSG_REPLY_STATS   u32 n_metrics | n x (key:str, f64 value) |
+                           u32 n_spans  | n x (u64 trace_id, u64 span_id,
+                           u64 parent_id, f64 ts_us, f64 dur_us, u64 pid,
+                           name:str, attrs:str)
+       MSG_STATS returns the worker's full MetricsRegistry snapshot
+       (same key/f64 layout as health, but everything: histograms
+       flattened Prometheus-style) plus its recent finished spans, so a
+       Fabric supervisor aggregates metrics and assembles cross-process
+       span trees from every worker. v1-v4 clients still decode: the
+       trace field sits behind FLAG_TRACE which old encoders never set,
+       and old decoders reject unknown versions with a typed error as
+       before.
 
 Malformed input: every decoder raises ``ValueError`` with byte-offset
 context on truncated or hostile payloads — never a bare ``IndexError`` or
@@ -58,21 +77,33 @@ import socket
 import struct
 from typing import Dict, List, Optional, Sequence, Tuple
 
-VERSION = 4
+VERSION = 5
 MIN_VERSION = 1
 FLAG_DEADLINE = 1
+FLAG_TRACE = 2
 MSG_GET_SCORE = 1
 MSG_GET_SCORE_BATCH = 2
 MSG_RANK = 3
 MSG_RANK_BATCH = 4
 MSG_HEALTH = 5
 MSG_DRAIN = 6
+MSG_STATS = 7
 MSG_REPLY_SCORE = 101
 MSG_REPLY_SCORES = 102
 MSG_REPLY_RANKING = 103
 MSG_REPLY_HEALTH = 104
+MSG_REPLY_STATS = 105
 MSG_SHED = 254
 MSG_ERROR = 255
+
+#: v5 trace context as it crosses the wire: (trace_id, span_id), two u64s.
+TraceContext = Tuple[int, int]
+
+#: One finished span in MSG_REPLY_STATS wire form:
+#: (trace_id, span_id, parent_id, ts_us, dur_us, pid, name, attrs).
+WireSpan = Tuple[int, int, int, float, float, int, str, str]
+_SPAN_FIXED_FMT = "<QQQddQ"
+_SPAN_FIXED_SIZE = struct.calcsize(_SPAN_FIXED_FMT)  # 48 bytes
 
 #: One ranked result: (doc_id, sent_id, score).
 RankedItem = Tuple[int, int, float]
@@ -119,15 +150,23 @@ def _check_count(n: int, remaining: int, min_bytes: int, what: str) -> None:
                          f"({remaining} bytes remaining)")
 
 
-def _request_header(deadline_s: Optional[float]) -> bytes:
-    if deadline_s is None:
-        return bytes([VERSION, 0])
-    return bytes([VERSION, FLAG_DEADLINE]) + struct.pack("<d", deadline_s)
+def _request_header(deadline_s: Optional[float],
+                    trace: Optional[TraceContext] = None) -> bytes:
+    flags = 0
+    tail = b""
+    if deadline_s is not None:
+        flags |= FLAG_DEADLINE
+        tail += struct.pack("<d", deadline_s)
+    if trace is not None:
+        flags |= FLAG_TRACE
+        tail += struct.pack("<QQ", int(trace[0]), int(trace[1]))
+    return bytes([VERSION, flags]) + tail
 
 
-def _decode_header(buf: memoryview) -> Tuple[Optional[float], int]:
-    """Version/flags/deadline prefix shared by every request decoder.
-    Returns (deadline_s or None, body offset)."""
+def _decode_header_ex(buf: memoryview
+                      ) -> Tuple[Optional[float], Optional[TraceContext], int]:
+    """Version/flags/deadline/trace prefix shared by every request decoder.
+    Returns (deadline_s or None, trace context or None, body offset)."""
     if len(buf) == 0:
         raise ValueError("empty request payload (version byte missing at "
                          "offset 0)")
@@ -136,41 +175,58 @@ def _decode_header(buf: memoryview) -> Tuple[Optional[float], int]:
         raise ValueError(f"wire version {ver} outside "
                          f"[{MIN_VERSION}, {VERSION}]")
     if ver == 1:
-        return None, 1
+        return None, None, 1
     if len(buf) < 2:
         raise ValueError("truncated header: flags byte missing at offset 1")
     flags = buf[1]
     off = 2
     deadline_s: Optional[float] = None
+    trace: Optional[TraceContext] = None
     if flags & FLAG_DEADLINE:
         (deadline_s,) = _unpack_from("<d", buf, off)
         off += 8
+    if flags & FLAG_TRACE:
+        trace_id, span_id = _unpack_from("<QQ", buf, off)
+        trace = (trace_id, span_id)
+        off += 16
+    return deadline_s, trace, off
+
+
+def _decode_header(buf: memoryview) -> Tuple[Optional[float], int]:
+    """Pre-v5 view of the header: (deadline_s or None, body offset)."""
+    deadline_s, _, off = _decode_header_ex(buf)
     return deadline_s, off
 
 
 def encode_get_score(question: str, answer: str,
-                     deadline_s: Optional[float] = None) -> bytes:
-    payload = (_request_header(deadline_s)
+                     deadline_s: Optional[float] = None,
+                     trace: Optional[TraceContext] = None) -> bytes:
+    payload = (_request_header(deadline_s, trace)
                + _pack_str(question) + _pack_str(answer))
     return struct.pack("<IB", len(payload), MSG_GET_SCORE) + payload
 
 
 def encode_get_score_batch(pairs: Sequence[Tuple[str, str]],
-                           deadline_s: Optional[float] = None) -> bytes:
-    payload = _request_header(deadline_s) + struct.pack("<I", len(pairs))
+                           deadline_s: Optional[float] = None,
+                           trace: Optional[TraceContext] = None) -> bytes:
+    payload = (_request_header(deadline_s, trace)
+               + struct.pack("<I", len(pairs)))
     for q, a in pairs:
         payload += _pack_str(q) + _pack_str(a)
     return struct.pack("<IB", len(payload), MSG_GET_SCORE_BATCH) + payload
 
 
-def encode_rank(query: str, deadline_s: Optional[float] = None) -> bytes:
-    payload = _request_header(deadline_s) + _pack_str(query)
+def encode_rank(query: str, deadline_s: Optional[float] = None,
+                trace: Optional[TraceContext] = None) -> bytes:
+    payload = _request_header(deadline_s, trace) + _pack_str(query)
     return struct.pack("<IB", len(payload), MSG_RANK) + payload
 
 
 def encode_rank_batch(queries: Sequence[str],
-                      deadline_s: Optional[float] = None) -> bytes:
-    payload = _request_header(deadline_s) + struct.pack("<I", len(queries))
+                      deadline_s: Optional[float] = None,
+                      trace: Optional[TraceContext] = None) -> bytes:
+    payload = (_request_header(deadline_s, trace)
+               + struct.pack("<I", len(queries)))
     for q in queries:
         payload += _pack_str(q)
     return struct.pack("<IB", len(payload), MSG_RANK_BATCH) + payload
@@ -191,10 +247,19 @@ def encode_drain(deadline_s: Optional[float] = None) -> bytes:
     return struct.pack("<IB", len(payload), MSG_DRAIN) + payload
 
 
+def encode_stats(deadline_s: Optional[float] = None) -> bytes:
+    """Full telemetry pull: header-only request, answered with
+    MSG_REPLY_STATS (the process's MetricsRegistry snapshot + recent
+    finished spans)."""
+    payload = _request_header(deadline_s)
+    return struct.pack("<IB", len(payload), MSG_STATS) + payload
+
+
 def decode_control_request(msg_type: int, payload: bytes) -> Optional[float]:
-    """Decode a v4 control frame (MSG_HEALTH / MSG_DRAIN); returns the
-    deadline_s or None (control frames carry no body past the header)."""
-    if msg_type not in (MSG_HEALTH, MSG_DRAIN):
+    """Decode a control frame (MSG_HEALTH / MSG_DRAIN / MSG_STATS); returns
+    the deadline_s or None (control frames carry no body past the
+    header)."""
+    if msg_type not in (MSG_HEALTH, MSG_DRAIN, MSG_STATS):
         raise ValueError(f"unknown control msg type {msg_type}")
     return _decode_header(memoryview(payload))[0]
 
@@ -231,6 +296,60 @@ def decode_reply_health(msg_type: int, payload: bytes) -> Dict[str, float]:
         off += 8
         out[key] = value
     return out
+
+
+def encode_reply_stats(metrics: Dict[str, float],
+                       spans: Sequence[WireSpan] = ()) -> bytes:
+    """Full telemetry reply: the registry snapshot (same key/f64 layout as
+    health) followed by recent finished spans."""
+    parts = [struct.pack("<I", len(metrics))]
+    for key, value in metrics.items():
+        parts.append(_pack_str(key))
+        parts.append(struct.pack("<d", float(value)))
+    parts.append(struct.pack("<I", len(spans)))
+    for (trace_id, span_id, parent_id, ts_us, dur_us, pid,
+         name, attrs) in spans:
+        parts.append(struct.pack(_SPAN_FIXED_FMT, int(trace_id),
+                                 int(span_id), int(parent_id), float(ts_us),
+                                 float(dur_us), int(pid)))
+        parts.append(_pack_str(name))
+        parts.append(_pack_str(attrs))
+    payload = b"".join(parts)
+    return struct.pack("<IB", len(payload), MSG_REPLY_STATS) + payload
+
+
+def decode_reply_stats(msg_type: int, payload: bytes
+                       ) -> Tuple[Dict[str, float], List[WireSpan]]:
+    """Decode a MSG_REPLY_STATS frame into (metrics snapshot, wire spans);
+    shed/error frames raise exactly like ``decode_reply``."""
+    if msg_type == MSG_SHED:
+        raise ShedError(f"request shed: {_reply_text(payload)}")
+    if msg_type == MSG_ERROR:
+        raise RuntimeError(f"server error: {_reply_text(payload)}")
+    if msg_type != MSG_REPLY_STATS:
+        raise ValueError(f"unknown stats reply type {msg_type}")
+    buf = memoryview(payload)
+    (n_metrics,) = _unpack_from("<I", buf, 0)
+    off = 4
+    _check_count(n_metrics, len(buf) - off, 12, "stats entry")
+    metrics: Dict[str, float] = {}
+    for _ in range(n_metrics):
+        key, off = _unpack_str(buf, off)
+        (value,) = _unpack_from("<d", buf, off)
+        off += 8
+        metrics[key] = value
+    (n_spans,) = _unpack_from("<I", buf, off)
+    off += 4
+    # Fixed part + two (possibly empty) length-prefixed strings.
+    _check_count(n_spans, len(buf) - off, _SPAN_FIXED_SIZE + 8, "span")
+    spans: List[WireSpan] = []
+    for _ in range(n_spans):
+        fixed = _unpack_from(_SPAN_FIXED_FMT, buf, off)
+        off += _SPAN_FIXED_SIZE
+        name, off = _unpack_str(buf, off)
+        attrs, off = _unpack_str(buf, off)
+        spans.append(fixed + (name, attrs))
+    return metrics, spans
 
 
 def encode_reply(scores: Sequence[float]) -> bytes:
@@ -303,16 +422,17 @@ def _read_exact(sock: socket.socket, n: int) -> bytes:
     return b"".join(chunks)
 
 
-def decode_request_ex(msg_type: int, payload: bytes
-                      ) -> Tuple[List[Tuple[str, str]], Optional[float]]:
-    """Decode a pair-scoring request frame into (pairs, deadline_s or
-    None)."""
+def decode_request_meta(
+        msg_type: int, payload: bytes
+) -> Tuple[List[Tuple[str, str]], Optional[float], Optional[TraceContext]]:
+    """Decode a pair-scoring request frame into (pairs, deadline_s or None,
+    trace context or None)."""
     buf = memoryview(payload)
-    deadline_s, off = _decode_header(buf)
+    deadline_s, trace, off = _decode_header_ex(buf)
     if msg_type == MSG_GET_SCORE:
         q, off = _unpack_str(buf, off)
         a, off = _unpack_str(buf, off)
-        return [(q, a)], deadline_s
+        return [(q, a)], deadline_s, trace
     if msg_type == MSG_GET_SCORE_BATCH:
         (n,) = _unpack_from("<I", buf, off)
         off += 4
@@ -322,23 +442,31 @@ def decode_request_ex(msg_type: int, payload: bytes
             q, off = _unpack_str(buf, off)
             a, off = _unpack_str(buf, off)
             pairs.append((q, a))
-        return pairs, deadline_s
+        return pairs, deadline_s, trace
     raise ValueError(f"unknown msg type {msg_type}")
 
 
+def decode_request_ex(msg_type: int, payload: bytes
+                      ) -> Tuple[List[Tuple[str, str]], Optional[float]]:
+    """Pre-v5 view: (pairs, deadline_s or None)."""
+    pairs, deadline_s, _ = decode_request_meta(msg_type, payload)
+    return pairs, deadline_s
+
+
 def decode_request(msg_type: int, payload: bytes) -> List[Tuple[str, str]]:
-    return decode_request_ex(msg_type, payload)[0]
+    return decode_request_meta(msg_type, payload)[0]
 
 
-def decode_rank_request(msg_type: int, payload: bytes
-                        ) -> Tuple[List[str], Optional[float]]:
-    """Decode a v3 ranking request frame into (queries, deadline_s or
-    None)."""
+def decode_rank_request_meta(
+        msg_type: int, payload: bytes
+) -> Tuple[List[str], Optional[float], Optional[TraceContext]]:
+    """Decode a ranking request frame into (queries, deadline_s or None,
+    trace context or None)."""
     buf = memoryview(payload)
-    deadline_s, off = _decode_header(buf)
+    deadline_s, trace, off = _decode_header_ex(buf)
     if msg_type == MSG_RANK:
         q, off = _unpack_str(buf, off)
-        return [q], deadline_s
+        return [q], deadline_s, trace
     if msg_type == MSG_RANK_BATCH:
         (n,) = _unpack_from("<I", buf, off)
         off += 4
@@ -347,8 +475,15 @@ def decode_rank_request(msg_type: int, payload: bytes
         for _ in range(n):
             q, off = _unpack_str(buf, off)
             queries.append(q)
-        return queries, deadline_s
+        return queries, deadline_s, trace
     raise ValueError(f"unknown ranking msg type {msg_type}")
+
+
+def decode_rank_request(msg_type: int, payload: bytes
+                        ) -> Tuple[List[str], Optional[float]]:
+    """Pre-v5 view: (queries, deadline_s or None)."""
+    queries, deadline_s, _ = decode_rank_request_meta(msg_type, payload)
+    return queries, deadline_s
 
 
 def _reply_text(payload: bytes) -> str:

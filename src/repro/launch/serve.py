@@ -66,11 +66,25 @@ def build_server(args, cfg, params, corpus, tok, index=None, ctx=None):
         # canonical pipeline server-side and answers MSG_RANK_BATCH with
         # ranked lists — one RPC per query batch instead of pair scoring.
         from repro.serving.engine import PipelineEngine
+        target = getattr(args, "plan_target", "batched")
+        pool = None
+        if target == "remote":
+            # Rerank stages dispatch through an in-process ReplicaPool
+            # (MicroBatcher + replica scorers) instead of calling the
+            # scorer inline — so each worker process exercises, and
+            # reports telemetry for, the full admission -> batcher ->
+            # scorer path (queue-wait vs compute histograms per worker).
+            import dataclasses as _dc
+            pool = ReplicaPool.build(args.backend, params, cfg, tok,
+                                     corpus.idf, n_replicas=args.replicas,
+                                     buckets=ctx.buckets or (1, 8, 64, 256),
+                                     policy=args.policy)
+            ctx = _dc.replace(ctx, remote=pool)
         engine = PipelineEngine(canonical_pipeline(args.backend), ctx,
-                                target="batched")
+                                target=target)
         if args.server == "simple":
             return SV.SimpleServer(engine, host=args.host,
-                                   port=args.port), None
+                                   port=args.port), pool
         # Ranking requests are sized at len(queries) x rows_per_query, so
         # the bound must cover a realistic query batch (one plan.run_many
         # is ONE RPC) — auto-raise to a 32-query batch; clients driving
@@ -80,7 +94,7 @@ def build_server(args, cfg, params, corpus, tok, index=None, ctx=None):
                      if args.max_queue > 0 else None)
         return SV.ThreadPoolServer(engine, host=args.host, port=args.port,
                                    num_workers=args.workers,
-                                   admission=admission), None
+                                   admission=admission), pool
     if args.server == "simple":
         scorer = ctx.scorer_for(args.backend)
         handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
@@ -145,6 +159,16 @@ def main():
                     help="serve the WHOLE canonical multi-stage pipeline "
                          "behind wire v3 ranking RPCs (MSG_RANK / "
                          "MSG_RANK_BATCH) instead of pair scoring")
+    ap.add_argument("--plan-target", default="batched",
+                    choices=["local", "batched", "remote"],
+                    help="execution plan for --serve-pipeline; 'remote' "
+                         "routes rerank through an in-process ReplicaPool "
+                         "(MicroBatcher + replicas), so this process "
+                         "reports batcher queue-wait/compute telemetry")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="on shutdown, export this process's finished "
+                         "spans as Chrome trace-event JSON (load in "
+                         "Perfetto / chrome://tracing)")
     ap.add_argument("--hedge-ms", type=float, default=None,
                     help="fixed hedge delay (ms) for plans whose "
                          "ctx.remote lists several endpoints; default "
@@ -170,10 +194,12 @@ def main():
         # The supervisor builds no world of its own — each worker process
         # trains/compiles independently (that is the point of the fabric).
         from repro.serving.fabric import Fabric
+        extra = (("--plan-target", args.plan_target)
+                 if args.plan_target != "batched" else ())
         with Fabric(n_workers=args.fabric, backend=args.backend,
                     train_steps=args.train_steps, server="threadpool",
                     worker_threads=args.workers,
-                    max_queue=args.max_queue) as fab:
+                    max_queue=args.max_queue, extra_args=extra) as fab:
             for w in fab.workers:
                 print(f"fabric worker {w.slot} (pid {w.proc.pid}) "
                       f"on {w.address}")
@@ -210,6 +236,11 @@ def main():
         srv.stop()
         if pool is not None:
             pool.stop()
+        if args.trace_out:
+            from repro.serving import telemetry
+            n = telemetry.export_chrome_trace(
+                args.trace_out, telemetry.get_tracer().finished())
+            print(f"wrote {n} trace events to {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,8 @@ import threading
 import time
 from typing import Callable, Dict, Optional
 
+from repro.serving import telemetry
+
 SHED_EXPIRED = "expired"
 SHED_QUEUE_FULL = "queue_full"
 SHED_LATE = "late"
@@ -110,26 +112,33 @@ class AdmissionController:
     def try_admit(self, n_rows: int,
                   deadline_abs: Optional[float] = None,
                   now: Optional[float] = None) -> Optional[str]:
-        """Admit (reserve rows, return None) or return a shed reason."""
+        """Admit (reserve rows, return None) or return a shed reason.
+        Every decision is mirrored into the process registry
+        (``admission_decisions{outcome=...}``) so MSG_STATS exports the
+        accept/shed split without touching this controller's lock."""
         now = time.perf_counter() if now is None else now
+        reason: Optional[str] = None
         with self._lock:
             if deadline_abs is not None and now >= deadline_abs:
                 self._shed[SHED_EXPIRED] += 1
-                return SHED_EXPIRED
-            if n_rows > self.max_queue_rows:
+                reason = SHED_EXPIRED
+            elif n_rows > self.max_queue_rows:
                 self._shed[SHED_TOO_LARGE] += 1
-                return SHED_TOO_LARGE
-            if self._outstanding_rows + n_rows > self.max_queue_rows:
+                reason = SHED_TOO_LARGE
+            elif self._outstanding_rows + n_rows > self.max_queue_rows:
                 self._shed[SHED_QUEUE_FULL] += 1
-                return SHED_QUEUE_FULL
-            if deadline_abs is not None:
+                reason = SHED_QUEUE_FULL
+            elif deadline_abs is not None:
                 est = self._estimated_wait_locked(n_rows)
                 if now + est > deadline_abs:
                     self._shed[SHED_LATE] += 1
-                    return SHED_LATE
-            self._outstanding_rows += n_rows
-            self._admitted += 1
-            return None
+                    reason = SHED_LATE
+            if reason is None:
+                self._outstanding_rows += n_rows
+                self._admitted += 1
+        telemetry.get_registry().inc("admission_decisions",
+                                     outcome=reason or "admitted")
+        return reason
 
     def release(self, n_rows: int, service_s: Optional[float] = None):
         """Return an admitted request's rows; feed the service-time EWMA."""

@@ -37,6 +37,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core.wire import ShedError
+from repro.serving import telemetry
 from repro.serving.admission import SHED_EXPIRED
 
 
@@ -46,10 +47,13 @@ class _Item:
     ``single`` marks a scalar ``submit`` (future resolves to float);
     otherwise the future resolves to the (n,) score array.
     ``deadline_abs`` (perf_counter clock) marks when the caller stops
-    caring; ``None`` never expires."""
+    caring; ``None`` never expires. ``trace`` is the submitter's span
+    context captured at enqueue — the batch loop runs in its own thread, so
+    thread-local propagation stops here and the item carries its trace
+    explicitly; ``t_enq`` anchors the queue-wait measurement."""
 
     __slots__ = ("q_tok", "a_tok", "feats", "n", "single", "future",
-                 "deadline_abs")
+                 "deadline_abs", "trace", "t_enq")
 
     def __init__(self, q_tok, a_tok, feats, single: bool,
                  deadline_abs: Optional[float] = None):
@@ -63,6 +67,8 @@ class _Item:
         self.n = q_tok.shape[0]
         self.single = single
         self.deadline_abs = deadline_abs
+        self.trace = telemetry.get_tracer().current_context()
+        self.t_enq = time.perf_counter()
         self.future: Future = Future()
 
 
@@ -177,12 +183,15 @@ class MicroBatcher:
             if i.deadline_abs is not None and now >= i.deadline_abs:
                 with self._lock:
                     self._rows_shed += i.n
+                telemetry.get_registry().inc("batcher_rows_expired", i.n)
                 i.future.set_exception(ShedError(SHED_EXPIRED))
             else:
                 live.append(i)
         return live
 
     def _loop(self):
+        tracer = telemetry.get_tracer()
+        registry = telemetry.get_registry()
         while self._running:
             items = self._expire(self._drain())
             if not items:
@@ -191,9 +200,33 @@ class MicroBatcher:
                 q = np.concatenate([i.q_tok for i in items])
                 a = np.concatenate([i.a_tok for i in items])
                 f = np.concatenate([i.feats for i in items])
+                t_deq = time.perf_counter()
+                for i in items:
+                    # The queue-wait vs compute split, per item: how long
+                    # the rows sat coalescing vs how long the scorer ran.
+                    registry.observe("batcher_queue_wait_ms",
+                                     (t_deq - i.t_enq) * 1e3)
+                    if i.trace is not None:
+                        tracer.record("batcher.queue_wait", i.t_enq, t_deq,
+                                      parent=i.trace, rows=i.n)
                 t0 = time.perf_counter()
-                scores = np.asarray(self.scorer(q, a, f))
-                per_row = (time.perf_counter() - t0) / q.shape[0]
+                # Adopt the first traced item's context for the scorer call
+                # so kernel-side spans (Scorer buckets) attach to a real
+                # request tree — the batch is shared, so one tree hosts it.
+                batch_trace = next((i.trace for i in items
+                                    if i.trace is not None), None)
+                with tracer.activate(batch_trace):
+                    scores = np.asarray(self.scorer(q, a, f))
+                t1 = time.perf_counter()
+                registry.observe("batcher_compute_ms", (t1 - t0) * 1e3)
+                registry.observe("batcher_batch_rows", float(q.shape[0]),
+                                 buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+                for i in items:
+                    if i.trace is not None:
+                        tracer.record("batcher.compute", t0, t1,
+                                      parent=i.trace, rows=i.n,
+                                      batch=int(q.shape[0]))
+                per_row = (t1 - t0) / q.shape[0]
                 with self._lock:
                     self._row_scorer_s = (
                         per_row if self._row_scorer_s is None

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.wire import ShedError
 from repro.data.featurize import FeaturizationCache
 from repro.data.tokenizer import HashingTokenizer
+from repro.serving import telemetry
 from repro.serving.admission import SHED_EXPIRED
 from repro.serving.batcher import MicroBatcher
 from repro.serving.stats import LatencyTracker
@@ -133,7 +134,11 @@ class ReplicaPool:
         if deadline_abs is not None and time.perf_counter() >= deadline_abs:
             raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
-        out = np.asarray(self.submit(pairs, deadline_abs).result())
+        # The batcher items capture this span as their trace parent, so the
+        # queue-wait/compute split lands under the request's tree.
+        with telemetry.get_tracer().span("pool.get_scores",
+                                         rows=len(pairs)):
+            out = np.asarray(self.submit(pairs, deadline_abs).result())
         self.tracker.observe(time.perf_counter() - t0, n=len(pairs))
         return out
 

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.wire import ShedError
 from repro.data.featurize import FeaturizationCache
 from repro.data.tokenizer import HashingTokenizer
+from repro.serving import telemetry
 from repro.serving.admission import SHED_EXPIRED
 from repro.serving.batcher import MicroBatcher
 from repro.serving.stats import LatencyTracker
@@ -73,12 +74,22 @@ class ServingEngine:
         if deadline_abs is not None and time.perf_counter() >= deadline_abs:
             raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
-        rows = [self._featurize(q, a) for q, a in pairs]
-        q_tok = np.stack([r[0] for r in rows])
-        a_tok = np.stack([r[1] for r in rows])
-        feats = np.stack([r[2] for r in rows])
-        out = self.batcher.submit_many(q_tok, a_tok, feats,
-                                       deadline_abs=deadline_abs).result()
+        tracer = telemetry.get_tracer()
+        with tracer.span("engine.get_scores", rows=len(pairs)):
+            with tracer.span("featurize") as feat_span:
+                before = self.features.stats()
+                rows = [self._featurize(q, a) for q, a in pairs]
+                after = self.features.stats()
+                feat_span.set_attr("hits", int(after["feat_cache_hits"]
+                                               - before["feat_cache_hits"]))
+                feat_span.set_attr(
+                    "misses", int(after["feat_cache_misses"]
+                                  - before["feat_cache_misses"]))
+            q_tok = np.stack([r[0] for r in rows])
+            a_tok = np.stack([r[1] for r in rows])
+            feats = np.stack([r[2] for r in rows])
+            out = self.batcher.submit_many(
+                q_tok, a_tok, feats, deadline_abs=deadline_abs).result()
         self.tracker.observe(time.perf_counter() - t0)
         return np.asarray(out)
 
@@ -132,7 +143,9 @@ class PipelineEngine:
 
     def rank_many(self, queries: Sequence[str]):
         t0 = time.perf_counter()
-        out = self.plan.run_many(queries)
+        with telemetry.get_tracer().span("engine.rank_many",
+                                         queries=len(queries)):
+            out = self.plan.run_many(queries)
         self.tracker.observe(time.perf_counter() - t0,
                              n=max(len(queries), 1))
         return out

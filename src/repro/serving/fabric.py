@@ -56,6 +56,7 @@ from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import service as SV
+from repro.serving import telemetry
 from repro.serving.hedge import HedgedTransport
 
 #: Discovery line a worker prints (flushed) once its listener is bound:
@@ -195,13 +196,20 @@ class WorkerEndpoint:
         self.slot = slot
         self.address = address
         self.client = SV.Client(address)    # work: rank/rank_batch/scores
-        self.control = SV.Client(address)   # v4: health / drain
+        # Control plane runs untraced: probes fire every probe_interval_s
+        # and would otherwise drown real request spans in the trace ring.
+        self.control = SV.Client(address, trace=False)
 
     def probe(self) -> Dict[str, float]:
         return self.control.health()
 
     def drain(self) -> Dict[str, float]:
         return self.control.drain()
+
+    def fetch_stats(self) -> Tuple[Dict[str, float], list]:
+        """Pull the worker PROCESS's full telemetry (v5 MSG_STATS): its
+        MetricsRegistry snapshot + recent finished spans."""
+        return self.control.stats()
 
     def close(self) -> None:
         for c in (self.client, self.control):
@@ -491,3 +499,44 @@ class Fabric:
             for k, v in self.router.stats().items():
                 s[f"router_{k}"] = v
         return s
+
+    # -------------------------------------------------------- telemetry --
+
+    def worker_metrics(self) -> Dict[int, Dict[str, float]]:
+        """Per-slot MetricsRegistry snapshots pulled over MSG_STATS.
+        Unreachable workers (mid-respawn) are skipped — the fleet view
+        should not fail because one slot is cycling."""
+        assert self.router is not None
+        out: Dict[int, Dict[str, float]] = {}
+        for i, ep in enumerate(list(self.router._endpoints)):
+            try:
+                metrics, _ = ep.fetch_stats()
+            except (OSError, RuntimeError, ValueError):
+                continue
+            out[i] = metrics
+        return out
+
+    def aggregate_metrics(self) -> Dict[str, float]:
+        """The fleet-wide registry: every worker's snapshot summed key-wise
+        (valid for counters and Prometheus-style histogram keys — see
+        ``telemetry.merge_snapshots``)."""
+        return telemetry.merge_snapshots(self.worker_metrics().values())
+
+    def collect_spans(self, trace_id: Optional[int] = None) -> list:
+        """Assemble the cross-process view of recent traces: this process's
+        finished spans (router/client side) plus every reachable worker's
+        spans fetched over MSG_STATS, optionally filtered to one trace.
+        Returns ``telemetry.SpanRecord`` objects — feed them to
+        ``telemetry.span_tree`` / ``export_chrome_trace``."""
+        assert self.router is not None
+        spans = list(telemetry.get_tracer().finished())
+        for ep in list(self.router._endpoints):
+            try:
+                _, wire_spans = ep.fetch_stats()
+            except (OSError, RuntimeError, ValueError):
+                continue
+            spans.extend(telemetry.SpanRecord.from_wire(w)
+                         for w in wire_spans)
+        if trace_id is not None:
+            spans = [s for s in spans if s.trace_id == trace_id]
+        return spans

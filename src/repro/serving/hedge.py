@@ -27,6 +27,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
+from repro.serving import telemetry
 from repro.serving.stats import LatencyTracker
 
 
@@ -74,15 +75,24 @@ class HedgedTransport:
     # --------------------------------------------------------- dispatch --
 
     def _attempt(self, idx: int, method: str, args: tuple,
-                 results: "queue.Queue") -> None:
+                 results: "queue.Queue", parent=None,
+                 role: str = "primary") -> None:
         lock = self._locks[idx]
+        tracer = telemetry.get_tracer()
         with lock:
             t0 = time.perf_counter()
-            try:
-                val = getattr(self._transports[idx], method)(*args)
-            except Exception as e:  # noqa: BLE001 — raced, judged by caller
-                results.put((idx, e, None))
-                return
+            # Attempts run in fresh daemon threads, so the caller's span
+            # context is handed over explicitly: the attempt span — and the
+            # client span it wraps — joins the request's trace tree.
+            with tracer.activate(parent):
+                with tracer.span(f"hedge.{role}", endpoint=idx,
+                                 method=method) as sp:
+                    try:
+                        val = getattr(self._transports[idx], method)(*args)
+                    except Exception as e:  # noqa: BLE001 — raced, judged
+                        sp.set_attr("error", type(e).__name__)
+                        results.put((idx, e, None))
+                        return
             self.tracker.observe(time.perf_counter() - t0)
         with self._meta:
             self._observed += 1
@@ -102,11 +112,16 @@ class HedgedTransport:
 
     def _call(self, method: str, args: tuple):
         primary, backup = self._pick_endpoints()
+        registry = telemetry.get_registry()
+        registry.inc("hedge_requests")
         with self._meta:
             self._requests += 1
+        # Captured here, replayed inside each attempt thread (thread-local
+        # span context does not cross thread starts).
+        parent = telemetry.get_tracer().current_context()
         results: "queue.Queue" = queue.Queue()
         threading.Thread(target=self._attempt,
-                         args=(primary, method, args, results),
+                         args=(primary, method, args, results, parent),
                          daemon=True).start()
         delay = self.hedge_delay_s()
         first = None
@@ -124,10 +139,12 @@ class HedgedTransport:
         # Hedge: fire the same request at the backup endpoint. The primary
         # attempt keeps draining its reply in the background; whichever
         # answers first (successfully) wins.
+        registry.inc("hedge_hedged")
         with self._meta:
             self._hedged += 1
         threading.Thread(target=self._attempt,
-                         args=(backup, method, args, results),
+                         args=(backup, method, args, results, parent,
+                               "hedge"),
                          daemon=True).start()
         outcomes = [first] if first is not None else []
         while True:
@@ -135,6 +152,7 @@ class HedgedTransport:
             outcomes.append(got)
             if got[1] is None:
                 if got[0] == backup:
+                    telemetry.get_registry().inc("hedge_wins")
                     with self._meta:
                         self._hedge_wins += 1
                 return got[2]

@@ -11,24 +11,54 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional
 
 
 class LatencyTracker:
     """``max_samples`` bounds memory for long-running servers: percentiles
     are computed over a sliding window of the most recent observations
-    (count/qps remain all-time)."""
+    (``count`` remains all-time).
 
-    def __init__(self, max_samples: int = 65536):
+    ``qps`` is the arrival rate over the trailing ``window_s`` seconds —
+    NOT all-time count over process age. A server that idled for an hour
+    and then took a burst reports the burst's rate, not a number diluted
+    by the idle hour; an idle server decays to 0 within one window. The
+    all-time average is still exported as ``qps_lifetime``. ``clock`` is
+    injectable so tests drive the window deterministically.
+    """
+
+    def __init__(self, max_samples: int = 65536, window_s: float = 30.0,
+                 clock: Optional[Callable[[], float]] = None):
         self._samples: "deque[float]" = deque(maxlen=max_samples)
-        self._started = time.perf_counter()
+        self._clock = clock or time.perf_counter
+        self._window_s = window_s
+        #: (arrival time, n) per observe, pruned to the trailing window.
+        self._arrivals: "deque[tuple]" = deque()
+        self._started = self._clock()
         self._count = 0
         self._lock = threading.Lock()
 
+    def _prune(self, now: float) -> None:
+        cutoff = now - self._window_s
+        while self._arrivals and self._arrivals[0][0] < cutoff:
+            self._arrivals.popleft()
+
     def observe(self, seconds: float, n: int = 1):
+        now = self._clock()
         with self._lock:
             self._samples.append(seconds)
             self._count += n
+            self._arrivals.append((now, n))
+            self._prune(now)
+
+    def reset(self) -> None:
+        """Forget everything, including the all-time count — a drained
+        server re-entering rotation starts its story from zero."""
+        with self._lock:
+            self._samples.clear()
+            self._arrivals.clear()
+            self._count = 0
+            self._started = self._clock()
 
     @staticmethod
     def _interp_percentile(xs: List[float], q: float) -> float:
@@ -47,13 +77,21 @@ class LatencyTracker:
         return self._interp_percentile(xs, q)
 
     def summary(self) -> Dict[str, float]:
+        now = self._clock()
         with self._lock:
+            self._prune(now)
+            windowed = sum(n for _, n in self._arrivals)
+            # Rate denominator: the full window once the process is old
+            # enough, the actual elapsed time before that (so a 2-second-old
+            # tracker doesn't divide 100 requests by 30s).
+            span = min(max(now - self._started, 1e-9), self._window_s)
             xs = sorted(self._samples)
             count = self._count
-        elapsed = max(time.perf_counter() - self._started, 1e-9)
+        elapsed = max(now - self._started, 1e-9)
         return {
             "count": float(count),
-            "qps": count / elapsed,
+            "qps": windowed / span,
+            "qps_lifetime": count / elapsed,
             "p50_ms": self._interp_percentile(xs, 0.50) * 1e3,
             "p90_ms": self._interp_percentile(xs, 0.90) * 1e3,
             "p99_ms": self._interp_percentile(xs, 0.99) * 1e3,

@@ -17,8 +17,12 @@ from repro.serving.fabric import (Fabric, FabricWorker, HealthRouter,
 
 @pytest.fixture(scope="module")
 def fabric():
+    # --plan-target remote puts a MicroBatcher-backed ReplicaPool inside
+    # each worker, so the telemetry tests below can see the queue-wait vs
+    # compute split that MSG_STATS reports per worker process.
     with Fabric(n_workers=2, backend="numpy", train_steps=1,
-                probe_interval_s=0.05) as fab:
+                probe_interval_s=0.05,
+                extra_args=("--plan-target", "remote")) as fab:
         yield fab
 
 
@@ -208,3 +212,108 @@ def test_health_router_spreads_ties_round_robin():
     }
     primaries = {router._pick_endpoints()[0] for _ in range(4)}
     assert primaries == {0, 1}              # an idle fleet still spreads
+
+
+# ------------------------------------------------------------- telemetry --
+
+def test_trace_crosses_process_boundary(fabric):
+    """The observability acceptance bar: ONE query fired at the fabric
+    yields ONE trace whose span tree crosses the process boundary — the
+    router-side client span parents the worker-side server/batcher/scorer
+    spans fetched back over MSG_STATS."""
+    import os
+
+    from repro.serving import telemetry
+
+    tr = telemetry.get_tracer()
+    tr.clear()
+    with tr.span("test.request") as root:
+        out = fabric.router.rank("follow this query across processes")
+    assert out
+    trace_id = root.context.trace_id
+
+    spans = fabric.collect_spans(trace_id)
+    by_name = {}
+    for s in spans:
+        by_name.setdefault(s.name, []).append(s)
+
+    # Router side of the tree, recorded in THIS process.
+    assert "hedge.primary" in by_name
+    client_ids = {s.span_id for s in by_name.get("client.rank", ())}
+    assert client_ids, "router-side client span missing from the trace"
+
+    # Worker side, fetched over the wire: same trace, different pid, and
+    # the server span's parent is the router's client span.
+    here = os.getpid()
+    servers = by_name.get("server.rank", [])
+    assert servers, "worker-side server span never joined the trace"
+    assert all(s.pid != here for s in servers)
+    assert any(s.parent_id in client_ids for s in servers)
+    for name in ("admission", "engine.rank_many", "pool.get_scores",
+                 "batcher.queue_wait", "batcher.compute", "scorer"):
+        assert name in by_name, f"span {name!r} missing from worker side"
+        assert all(s.pid != here for s in by_name[name]), name
+
+    # The assembled tree has the test's root at the top and the worker
+    # spans reachable beneath it — one connected tree, two processes.
+    roots, children = telemetry.span_tree(spans, trace_id=trace_id)
+    assert [r.name for r in roots] == ["test.request"]
+
+    def walk(span):
+        yield span
+        for kid in children.get(span.span_id, ()):
+            yield from walk(kid)
+
+    reach = {s.name for s in walk(roots[0])}
+    assert {"client.rank", "server.rank", "batcher.compute",
+            "scorer"} <= reach
+    text = telemetry.format_span_tree(spans, trace_id=trace_id)
+    assert text.splitlines()[0].startswith("test.request")
+
+
+def test_msg_stats_aggregates_batcher_histograms(fabric):
+    """MSG_STATS returns each live worker's registry snapshot, including
+    the batcher queue-wait vs compute histograms; the fabric-wide
+    aggregate is their key-wise sum."""
+    for i in range(6):                      # tie-spread routing feeds both
+        assert fabric.router.rank_batch([f"stats traffic {i}"])[0]
+    per_worker = fabric.worker_metrics()
+    assert set(per_worker) == {0, 1}
+    for slot, snap in per_worker.items():
+        assert snap.get("batcher_queue_wait_ms_count", 0.0) > 0.0, slot
+        assert snap.get("batcher_compute_ms_count", 0.0) > 0.0, slot
+        assert any(k.startswith("batcher_queue_wait_ms_bucket{")
+                   for k in snap), slot
+        assert snap.get("server_requests{type=rank}", 0.0) > 0.0, slot
+    agg = fabric.aggregate_metrics()
+    assert agg["batcher_compute_ms_count"] == pytest.approx(
+        sum(s["batcher_compute_ms_count"] for s in per_worker.values()))
+    assert agg["batcher_queue_wait_ms_count"] >= 2.0
+
+
+def test_cross_process_chrome_trace_exports(fabric, tmp_path):
+    """Spans collected across the fabric export as valid Chrome
+    trace-event JSON with one pid lane per process."""
+    import json
+    import os
+
+    from repro.serving import telemetry
+
+    tr = telemetry.get_tracer()
+    tr.clear()
+    with tr.span("test.export") as root:
+        fabric.router.rank_batch(["export this trace"])
+    spans = fabric.collect_spans(root.context.trace_id)
+    path = tmp_path / "fabric_trace.json"
+    n = telemetry.export_chrome_trace(str(path), spans)
+    assert n == len(spans) > 0
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    assert len(events) == n
+    for ev in events:
+        assert ev["ph"] == "X"
+        assert ev["ts"] > 0.0 and ev["dur"] >= 0.0
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+    pids = {ev["pid"] for ev in events}
+    assert len(pids) >= 2, "trace should span router + worker processes"
+    assert os.getpid() in pids

@@ -86,3 +86,46 @@ def test_latency_tracker_percentiles():
     assert s["p50_ms"] == pytest.approx(1.0)
     assert s["p99_ms"] >= 100.0
     assert s["count"] == 100
+
+
+def test_latency_tracker_windowed_qps():
+    """qps is the trailing-window arrival rate, not all-time count over
+    process age: after an idle stretch longer than the window it decays to
+    zero while the lifetime average stays positive."""
+    t = [0.0]
+    tr = LatencyTracker(window_s=10.0, clock=lambda: t[0])
+    for _ in range(100):
+        tr.observe(0.001)
+    t[0] = 10.0     # tracker is exactly one window old
+    s = tr.summary()
+    assert s["qps"] == pytest.approx(10.0)          # 100 reqs / 10s window
+    assert s["qps_lifetime"] == pytest.approx(10.0)
+    t[0] = 1000.0   # long idle stretch
+    s = tr.summary()
+    assert s["qps"] == 0.0                          # window is empty
+    assert s["qps_lifetime"] == pytest.approx(0.1)  # 100 / 1000s
+    assert s["count"] == 100                        # all-time count kept
+
+
+def test_latency_tracker_young_tracker_uses_elapsed_not_window():
+    """A tracker younger than its window must divide by actual elapsed
+    time — 100 requests in 2 seconds is 50 qps, not 100/30."""
+    t = [0.0]
+    tr = LatencyTracker(window_s=30.0, clock=lambda: t[0])
+    for _ in range(100):
+        tr.observe(0.001)
+    t[0] = 2.0
+    assert tr.summary()["qps"] == pytest.approx(50.0)
+
+
+def test_latency_tracker_reset():
+    t = [0.0]
+    tr = LatencyTracker(window_s=10.0, clock=lambda: t[0])
+    for _ in range(5):
+        tr.observe(0.5)
+    tr.reset()
+    t[0] = 1.0
+    s = tr.summary()
+    assert s["count"] == 0 and s["qps"] == 0.0 and s["p99_ms"] == 0.0
+    tr.observe(0.001, n=3)      # usable again after reset
+    assert tr.summary()["count"] == 3

@@ -403,3 +403,144 @@ def test_fuzz_truncated_v4_frames_only_raise_value_error(frame, decoder):
             decoder(t, payload[:cut])
         except ValueError:
             pass
+
+
+# ------------------------------------- v5 trace context + MSG_STATS telemetry
+
+TRACE = (0x1122334455667788, 0x99AABBCCDDEEFF00)
+
+
+@pytest.mark.parametrize("frame,decoder", [
+    (wire.encode_get_score("q", "a", trace=TRACE),
+     wire.decode_request_meta),
+    (wire.encode_get_score("q", "a", deadline_s=0.5, trace=TRACE),
+     wire.decode_request_meta),
+    (wire.encode_get_score_batch([("q1", "a1"), ("q2", "a2")], trace=TRACE),
+     wire.decode_request_meta),
+    (wire.encode_rank("who?", trace=TRACE), wire.decode_rank_request_meta),
+    (wire.encode_rank("who?", deadline_s=0.25, trace=TRACE),
+     wire.decode_rank_request_meta),
+    (wire.encode_rank_batch(["a", "b"], trace=TRACE),
+     wire.decode_rank_request_meta),
+])
+def test_v5_trace_context_roundtrip_every_request_type(frame, decoder):
+    """FLAG_TRACE carries (trace_id, span_id) on every request frame type,
+    with or without a deadline, and the payload body survives intact."""
+    t, payload = _frame_parts(frame)
+    body, deadline, trace = decoder(t, payload)
+    assert trace == TRACE
+    assert body  # the body decoded past the extended header
+
+
+def test_v5_frame_without_trace_decodes_trace_none():
+    t, payload = _frame_parts(wire.encode_get_score("q", "a"))
+    pairs, deadline, trace = wire.decode_request_meta(t, payload)
+    assert pairs == [("q", "a")] and trace is None
+    t, payload = _frame_parts(wire.encode_rank_batch(["x"], deadline_s=1.0))
+    queries, deadline, trace = wire.decode_rank_request_meta(t, payload)
+    assert queries == ["x"] and deadline == 1.0 and trace is None
+
+
+def _v3_rank_frame(query: str, deadline_s=None) -> bytes:
+    """Hand-rolled version-3 ranking frame (what a pre-trace client sends)."""
+    head = (bytes([3, 0]) if deadline_s is None
+            else bytes([3, wire.FLAG_DEADLINE]) + struct.pack("<d",
+                                                              deadline_s))
+    payload = head + wire._pack_str(query)
+    return struct.pack("<IB", len(payload), wire.MSG_RANK) + payload
+
+
+def _v4_get_score_frame(q: str, a: str) -> bytes:
+    """Hand-rolled version-4 frame (health/drain era, pre-trace)."""
+    payload = bytes([4, 0]) + wire._pack_str(q) + wire._pack_str(a)
+    return struct.pack("<IB", len(payload), wire.MSG_GET_SCORE) + payload
+
+
+def test_v3_and_v4_clients_decode_on_v5_server():
+    """Pre-v5 frames (no FLAG_TRACE, older version bytes) must decode on a
+    v5 server with trace=None — old clients keep working unchanged."""
+    t, payload = _frame_parts(_v3_rank_frame("old query", deadline_s=0.5))
+    queries, deadline, trace = wire.decode_rank_request_meta(t, payload)
+    assert queries == ["old query"] and deadline == 0.5 and trace is None
+    t, payload = _frame_parts(_v4_get_score_frame("q", "a"))
+    pairs, deadline, trace = wire.decode_request_meta(t, payload)
+    assert pairs == [("q", "a")] and deadline is None and trace is None
+
+
+def test_truncated_trace_context_raises_value_error():
+    payload = (bytes([wire.VERSION, wire.FLAG_TRACE])
+               + struct.pack("<Q", 1))    # only half the trace context
+    with pytest.raises(ValueError, match="truncated"):
+        wire.decode_request_meta(wire.MSG_GET_SCORE, payload)
+
+
+def test_stats_request_roundtrip():
+    t, payload = _frame_parts(wire.encode_stats())
+    assert t == wire.MSG_STATS
+    assert wire.decode_control_request(t, payload) is None
+    t, payload = _frame_parts(wire.encode_stats(deadline_s=0.75))
+    assert wire.decode_control_request(t, payload) == pytest.approx(0.75)
+
+
+def test_reply_stats_roundtrip_metrics_and_spans():
+    metrics = {"batcher_queue_wait_ms_count": 7.0,
+               "server_requests{type=rank}": 3.0}
+    spans = [
+        (1, 2, 0, 1000.5, 42.25, 4242, "server.rank", "rows=80"),
+        (1, 3, 2, 1001.0, 10.0, 4242, "scorer", ""),
+    ]
+    t, payload = _frame_parts(wire.encode_reply_stats(metrics, spans))
+    assert t == wire.MSG_REPLY_STATS
+    got_metrics, got_spans = wire.decode_reply_stats(t, payload)
+    assert got_metrics == metrics
+    assert got_spans == spans
+
+
+def test_reply_stats_empty_roundtrip():
+    t, payload = _frame_parts(wire.encode_reply_stats({}))
+    assert wire.decode_reply_stats(t, payload) == ({}, [])
+
+
+def test_reply_stats_shed_and_error_raise_like_scores():
+    t, payload = _frame_parts(wire.encode_shed("draining"))
+    with pytest.raises(wire.ShedError, match="draining"):
+        wire.decode_reply_stats(t, payload)
+    t, payload = _frame_parts(wire.encode_error("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        wire.decode_reply_stats(t, payload)
+    with pytest.raises(ValueError, match="stats reply"):
+        wire.decode_reply_stats(wire.MSG_REPLY_HEALTH, b"\x00" * 8)
+
+
+def test_reply_stats_hostile_counts_raise():
+    # metrics count claiming 2^30 entries with no body
+    with pytest.raises(ValueError, match="stats entry"):
+        wire.decode_reply_stats(wire.MSG_REPLY_STATS,
+                                struct.pack("<I", 1 << 30))
+    # span count claiming 2^30 spans after zero metrics
+    payload = struct.pack("<I", 0) + struct.pack("<I", 1 << 30)
+    with pytest.raises(ValueError, match="span count"):
+        wire.decode_reply_stats(wire.MSG_REPLY_STATS, payload)
+
+
+@pytest.mark.parametrize("frame,decoder", [
+    (wire.encode_get_score("q here", "a here", 0.5, trace=TRACE),
+     lambda t, p: wire.decode_request_meta(t, p)),
+    (wire.encode_rank_batch(["one", "two"], 0.1, trace=TRACE),
+     lambda t, p: wire.decode_rank_request_meta(t, p)),
+    (wire.encode_stats(0.5),
+     lambda t, p: wire.decode_control_request(t, p)),
+    (wire.encode_reply_stats(
+        {"k1": 1.0, "longer_metric{label=x}": 2.5},
+        [(1, 2, 3, 10.0, 5.0, 99, "server.rank", "rows=4;shed=")]),
+     lambda t, p: wire.decode_reply_stats(t, p)),
+])
+def test_fuzz_truncated_v5_frames_only_raise_value_error(frame, decoder):
+    """Every proper prefix of a v5 frame must decode or raise ValueError —
+    never IndexError/struct.error."""
+    t, payload = frame[4], frame[5:]
+    for cut in range(len(payload)):
+        try:
+            decoder(t, payload[:cut])
+        except ValueError:
+            pass
