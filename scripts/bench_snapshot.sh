@@ -3,8 +3,8 @@
 # plus the fabric process-scaling sweep and drop the machine-readable rows
 # at the repo root, so the perf trajectory accumulates one JSON per PR.
 #
-#   scripts/bench_snapshot.sh            # writes BENCH_pr7.json
-#   scripts/bench_snapshot.sh pr8        # writes BENCH_pr8.json
+#   scripts/bench_snapshot.sh            # writes BENCH_pr8.json
+#   scripts/bench_snapshot.sh pr9        # writes BENCH_pr9.json
 #   PROCESSES=1,2 scripts/bench_snapshot.sh   # smaller fabric sweep
 #
 # The snapshot covers the four execution plans (local / batched / remote /
@@ -16,7 +16,7 @@
 # newest snapshots as a non-fatal advisory after a green suite).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-tag="${1:-pr7}"
+tag="${1:-pr8}"
 out="BENCH_${tag}.json"
 procs="${PROCESSES:-1,2,4}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# repro-lint: AST-based invariant gate (lock discipline, wire conformance,
+# telemetry hygiene, ops purity, jit/pallas purity).
+#
+#   scripts/lint.sh                 # full run, baseline-suppressed
+#   scripts/lint.sh --checks LOCK   # one checker
+#   scripts/lint.sh --show-suppressed
+#
+# Exits nonzero on any unsuppressed finding. To suppress a justified
+# finding, add a line to scripts/lint_baseline.txt (or an inline
+# "# repro-lint: allow[CODE] reason" comment) — see docs/invariants.md.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src python -m repro.analysis \
+    --root . --baseline scripts/lint_baseline.txt "$@"

@@ -15,6 +15,12 @@
 # means "re-take the snapshot and look", not "the build is broken").
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Hard gate: repro-lint static invariants (lock discipline, wire
+# conformance, telemetry hygiene, ops purity, jit purity). Runs first —
+# it takes ~2s and an invariant violation fails the build before pytest.
+scripts/lint.sh
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"
 
 # Perf advisory: diff the two newest benchmark snapshots; never fails the

@@ -1,0 +1,13 @@
+"""repro-lint: AST-based invariant checkers for this repository.
+
+The serving stack's correctness rests on a handful of cross-cutting rules
+that no unit test can pin down for *future* code — lock discipline across
+nine threaded modules, wire-protocol conformance for every frame type,
+telemetry hygiene, the ops algebra's value-object purity, and jit/pallas
+trace purity.  This package turns those rules into machine-checked
+findings (``LOCK001`` … ``JIT003``), run as a hard tier-1 gate by
+``scripts/lint.sh``.  See ``docs/invariants.md`` for the rule catalogue
+and the suppression workflow.
+"""
+from repro.analysis.base import Baseline, Finding, Module  # noqa: F401
+from repro.analysis.project import Project                 # noqa: F401

@@ -1,0 +1,192 @@
+"""Shared plumbing for repro-lint: findings, parsed modules, suppressions.
+
+A checker produces :class:`Finding` objects — (code, path, line, scope,
+message) — and never decides suppression itself.  The runner filters them
+through two mechanisms:
+
+* **inline allows** — a ``# repro-lint: allow[CODE] reason`` comment on the
+  offending line (or the line directly above it) suppresses that code there;
+* **the baseline file** — checked-in lines of the form
+  ``CODE path::scope -- reason`` matched by (code, path, enclosing scope),
+  so a justified finding survives refactors that move it a few lines.
+
+Both require a human-written justification next to the suppression, which is
+the point: every invariant violation that ships is one somebody argued for.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+_ALLOW_RE = re.compile(r"#\s*repro-lint:\s*allow\[([A-Z0-9_,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation at a specific source location."""
+
+    code: str       #: e.g. "LOCK001"
+    path: str       #: repo-relative posix path
+    line: int       #: 1-based source line
+    scope: str      #: enclosing qualname ("Class.method") or "<module>"
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: stable across small line-number churn."""
+        return (self.code, self.path, self.scope)
+
+    def render(self) -> str:
+        return f"{self.code} {self.path}:{self.line} [{self.scope}] " \
+               f"{self.message}"
+
+
+class Module:
+    """One parsed source file plus its inline-allow map."""
+
+    def __init__(self, root: str, relpath: str):
+        self.path = relpath.replace(os.sep, "/")
+        self.abspath = os.path.join(root, relpath)
+        with open(self.abspath, "r", encoding="utf-8") as f:
+            self.source = f.read()
+        self.tree = ast.parse(self.source, filename=self.path)
+        self.lines = self.source.splitlines()
+        #: line number -> set of finding codes allowed on that line
+        self.allows: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(text)
+            if m:
+                self.allows[i] = {c.strip() for c in m.group(1).split(",")
+                                  if c.strip()}
+
+    def allowed(self, code: str, line: int) -> bool:
+        """True if an inline allow covers ``code`` at ``line`` (same line
+        or the directly preceding comment line)."""
+        for ln in (line, line - 1):
+            if code in self.allows.get(ln, ()):
+                return True
+        return False
+
+    def iter_scoped_functions(self):
+        """Yield ``(qualname, class_name_or_None, FunctionDef)`` for every
+        function/method in the module, including nested ones."""
+
+        def walk(node, prefix: str, cls: Optional[str]):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    yield from walk(child, f"{prefix}{child.name}.",
+                                    child.name)
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    yield f"{prefix}{child.name}", cls, child
+                    yield from walk(child, f"{prefix}{child.name}.", cls)
+                else:
+                    yield from walk(child, prefix, cls)
+
+        yield from walk(self.tree, "", None)
+
+
+@dataclasses.dataclass
+class BaselineEntry:
+    code: str
+    path: str
+    scope: str
+    reason: str
+    line_no: int
+
+
+class Baseline:
+    """Checked-in suppression list; tracks which entries were actually hit
+    so stale ones can be reported (warn-only — a fixed finding should have
+    its baseline line deleted, but that must not fail the gate)."""
+
+    def __init__(self, entries: Optional[List[BaselineEntry]] = None):
+        self.entries = entries or []
+        self._index: Dict[Tuple[str, str, str], BaselineEntry] = {
+            (e.code, e.path, e.scope): e for e in self.entries}
+        self._used: Set[Tuple[str, str, str]] = set()
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        entries: List[BaselineEntry] = []
+        if not os.path.exists(path):
+            return cls(entries)
+        with open(path, "r", encoding="utf-8") as f:
+            for ln, raw in enumerate(f, start=1):
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                entries.append(cls._parse_line(line, ln, path))
+        return cls(entries)
+
+    @staticmethod
+    def _parse_line(line: str, ln: int, path: str) -> BaselineEntry:
+        head, sep, reason = line.partition(" -- ")
+        if not sep or not reason.strip():
+            raise ValueError(
+                f"{path}:{ln}: baseline entry needs a ' -- reason': {line!r}")
+        parts = head.split()
+        if len(parts) != 2 or "::" not in parts[1]:
+            raise ValueError(
+                f"{path}:{ln}: expected 'CODE path::scope -- reason', "
+                f"got: {line!r}")
+        code = parts[0]
+        mod_path, _, scope = parts[1].partition("::")
+        return BaselineEntry(code=code, path=mod_path, scope=scope,
+                             reason=reason.strip(), line_no=ln)
+
+    def suppress(self, finding: Finding) -> bool:
+        entry = self._index.get(finding.key())
+        if entry is None:
+            return False
+        self._used.add(finding.key())
+        return True
+
+    def stale_entries(self) -> List[BaselineEntry]:
+        return [e for e in self.entries
+                if (e.code, e.path, e.scope) not in self._used]
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def walk_in_scope(fn: ast.AST) -> Iterable[ast.AST]:
+    """Like ``ast.walk`` over a function body, but does not descend into
+    nested function/class definitions (they are separate scopes and are
+    visited on their own by ``Module.iter_scoped_functions``).  Lambdas
+    stay in the enclosing scope."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def names_referenced(node: ast.AST) -> Set[str]:
+    """Every bare Name and Attribute tail referenced under ``node`` —
+    used for 'does this function mention MSG_X' reference closures."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out

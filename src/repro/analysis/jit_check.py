@@ -1,0 +1,269 @@
+"""JIT — jit/pallas purity checker.
+
+Finds every function reachable from a ``jax.jit`` or ``pl.pallas_call``
+root — decorated functions, ``jax.jit(f)`` / ``jax.jit(partial(f, ...))``
+/ ``jax.jit(lambda ...)`` call sites, and pallas kernel arguments — then
+enforces:
+
+* **JIT001** — no wall-clock or OS randomness inside traced code
+  (``time.*``, ``random.*``, ``np.random.*``, ``os.urandom``): the call
+  runs once at trace time and its value is baked into the compiled
+  artifact, which is almost never what the author meant.  ``jax.random``
+  is allowed (explicit keys, pure).
+* **JIT002** — no ``global``/``nonlocal`` and no mutation of module-level
+  state: tracing caches on input shapes, so the side effect fires on an
+  unpredictable subset of calls.
+* **JIT003** — ``pallas_call`` ``grid=`` / ``out_shape=`` expressions must
+  be static: names, arithmetic, ``.shape``/``.dtype`` attributes, and an
+  allowlist of shape helpers (``pl.cdiv``, ``math.ceil``, ``min`` …).
+  Any other call there makes the kernel's geometry data-dependent.
+
+Call resolution follows module-level functions through import aliases
+(``from repro.kernels import sm_cnn`` → ``sm_cnn.score``); unresolvable
+calls are assumed to be jax/numpy primitives and skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import (Finding, Module, call_name, dotted_name,
+                                 walk_in_scope)
+from repro.analysis.project import Project
+
+_IMPURE_EXACT = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.sleep",
+    "time.process_time", "time.time_ns", "os.urandom", "uuid.uuid4",
+}
+_IMPURE_PREFIXES = ("random.", "np.random.", "numpy.random.")
+_STATIC_CALL_ALLOWLIST = {
+    "jax.ShapeDtypeStruct", "ShapeDtypeStruct", "pl.cdiv", "cdiv",
+    "min", "max", "int", "len", "tuple", "range", "math.ceil",
+    "math.floor", "math.prod", "prod", "pl.BlockSpec", "BlockSpec",
+}
+_JIT_NAMES = {"jax.jit", "jit"}
+_PALLAS_NAMES = {"pl.pallas_call", "pallas_call"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def _import_aliases(mod: Module) -> Tuple[Dict[str, str],
+                                          Dict[str, Tuple[str, str]]]:
+    """(module aliases: name -> dotted module,
+    symbol aliases: name -> (dotted module, symbol))."""
+    mods: Dict[str, str] = {}
+    syms: Dict[str, Tuple[str, str]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.asname:
+                    mods[alias.asname] = alias.name
+                else:
+                    mods[alias.name.split(".")[0]] = \
+                        alias.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                bound = alias.asname or alias.name
+                mods.setdefault(bound, f"{node.module}.{alias.name}")
+                syms[bound] = (node.module, alias.name)
+    return mods, syms
+
+
+class JitChecker:
+    def __init__(self, project: Project):
+        self.project = project
+        self.findings: List[Finding] = []
+        self._alias_cache: Dict[str, tuple] = {}
+        self._module_globals: Dict[str, Set[str]] = {}
+        for mod in project.modules.values():
+            g: Set[str] = set()
+            for node in mod.tree.body:
+                if isinstance(node, ast.Assign):
+                    g |= {t.id for t in node.targets
+                          if isinstance(t, ast.Name)}
+                elif isinstance(node, ast.AnnAssign) \
+                        and isinstance(node.target, ast.Name):
+                    g.add(node.target.id)
+            self._module_globals[mod.path] = g
+
+    # ------------------------------------------------------ resolution --
+
+    def _aliases(self, mod: Module) -> tuple:
+        if mod.path not in self._alias_cache:
+            self._alias_cache[mod.path] = _import_aliases(mod)
+        return self._alias_cache[mod.path]
+
+    def _module_for(self, dotted_module: str) -> Optional[Module]:
+        rel = dotted_module.replace(".", "/")
+        return self.project.module_by_suffix(f"{rel}.py",
+                                             f"{rel}/__init__.py")
+
+    def _resolve_dotted(self, mod: Module, dotted: str
+                        ) -> Optional[Tuple[Module, str, ast.AST]]:
+        mods, _syms = self._aliases(mod)
+        parts = dotted.split(".")
+        if len(parts) < 2:
+            return None
+        head, func = parts[0], parts[-1]
+        module_dotted = ".".join(parts[:-1])
+        if head in mods:
+            module_dotted = ".".join([mods[head]] + parts[1:-1])
+        target = self._module_for(module_dotted)
+        if target is None:
+            return None
+        fn = self.project.functions.get((target.path, func))
+        if fn is None:
+            return None
+        return target, func, fn
+
+    def resolve_func_expr(self, mod: Module, node: ast.AST
+                          ) -> Optional[Tuple[Module, str, ast.AST]]:
+        """Resolve an expression naming a function: Name, module.attr,
+        partial(f, ...), or a lambda (returned as-is)."""
+        if isinstance(node, ast.Lambda):
+            return mod, "<lambda>", node
+        if isinstance(node, ast.Call) \
+                and call_name(node) in _PARTIAL_NAMES and node.args:
+            return self.resolve_func_expr(mod, node.args[0])
+        if isinstance(node, ast.Name):
+            fn = self.project.functions.get((mod.path, node.id))
+            if fn is not None:
+                return mod, node.id, fn
+            _mods, syms = self._aliases(mod)
+            if node.id in syms:
+                target = self._module_for(syms[node.id][0])
+                if target is not None:
+                    fn = self.project.functions.get(
+                        (target.path, syms[node.id][1]))
+                    if fn is not None:
+                        return target, syms[node.id][1], fn
+            return None
+        name = dotted_name(node)
+        if name:
+            return self._resolve_dotted(mod, name)
+        return None
+
+    # ----------------------------------------------------------- roots --
+
+    def _is_jit_decorated(self, fn: ast.AST) -> bool:
+        for dec in getattr(fn, "decorator_list", []):
+            name = dotted_name(dec)
+            if name in _JIT_NAMES:
+                return True
+            if isinstance(dec, ast.Call):
+                cname = call_name(dec)
+                if cname in _JIT_NAMES:
+                    return True
+                if cname in _PARTIAL_NAMES and dec.args \
+                        and dotted_name(dec.args[0]) in _JIT_NAMES:
+                    return True
+        return False
+
+    def collect_roots(self) -> List[Tuple[Module, str, ast.AST]]:
+        roots: List[Tuple[Module, str, ast.AST]] = []
+        for mod in sorted(self.project.modules.values(),
+                          key=lambda m: m.path):
+            if mod.path.startswith("tests/") or "/tests/" in mod.path \
+                    or "/analysis/" in mod.path:
+                continue
+            for (path, name), fn in self.project.functions.items():
+                if path == mod.path and self._is_jit_decorated(fn):
+                    roots.append((mod, name, fn))
+            scopes = [("<module>", None, mod.tree)]
+            scopes.extend((q, c, f)
+                          for q, c, f in mod.iter_scoped_functions())
+            for qualname, _cls, fn in scopes:
+                for node in walk_in_scope(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    cname = call_name(node)
+                    if cname in _JIT_NAMES and node.args:
+                        got = self.resolve_func_expr(mod, node.args[0])
+                        if got:
+                            roots.append(got)
+                    elif cname in _PALLAS_NAMES:
+                        if node.args:
+                            got = self.resolve_func_expr(mod,
+                                                         node.args[0])
+                            if got:
+                                roots.append(got)
+                        self._check_pallas_static(mod, qualname, node)
+        return roots
+
+    # ---------------------------------------------------------- JIT003 --
+
+    def _check_pallas_static(self, mod: Module, scope: str,
+                             call: ast.Call) -> None:
+        for kw in call.keywords:
+            if kw.arg not in ("grid", "out_shape"):
+                continue
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Call):
+                    cname = call_name(node) or "<dynamic>"
+                    if cname not in _STATIC_CALL_ALLOWLIST:
+                        self.findings.append(Finding(
+                            "JIT003", mod.path, node.lineno, scope,
+                            f"pallas_call {kw.arg}= calls {cname}() — "
+                            f"kernel geometry must be a static "
+                            f"shape expression"))
+
+    # ----------------------------------------------------- reachability --
+
+    def check(self) -> List[Finding]:
+        roots = self.collect_roots()
+        seen: Set[Tuple[str, str]] = set()
+        frontier = list(roots)
+        while frontier:
+            mod, name, fn = frontier.pop()
+            key = (mod.path, name if name != "<lambda>"
+                   else f"<lambda>@{fn.lineno}")
+            if key in seen:
+                continue
+            seen.add(key)
+            self._check_fn(mod, name, fn)
+            for node in (walk_in_scope(fn) if not isinstance(fn, ast.Lambda)
+                         else ast.walk(fn)):
+                if isinstance(node, ast.Call):
+                    got = self.resolve_func_expr(mod, node.func)
+                    if got:
+                        frontier.append(got)
+        return self.findings
+
+    def _check_fn(self, mod: Module, name: str, fn: ast.AST) -> None:
+        scope = name
+        globals_here = self._module_globals.get(mod.path, set())
+        nodes = (walk_in_scope(fn) if not isinstance(fn, ast.Lambda)
+                 else ast.walk(fn))
+        for node in nodes:
+            if isinstance(node, ast.Call):
+                cname = call_name(node) or ""
+                if cname in _IMPURE_EXACT \
+                        or cname.startswith(_IMPURE_PREFIXES):
+                    self.findings.append(Finding(
+                        "JIT001", mod.path, node.lineno, scope,
+                        f"{cname}() inside jit/pallas-reachable code — "
+                        f"evaluated once at trace time, then frozen into "
+                        f"the compiled artifact"))
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                kind = ("global" if isinstance(node, ast.Global)
+                        else "nonlocal")
+                self.findings.append(Finding(
+                    "JIT002", mod.path, node.lineno, scope,
+                    f"{kind} statement inside jit-reachable code — side "
+                    f"effects fire only at trace time"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    root = tgt
+                    while isinstance(root, (ast.Attribute, ast.Subscript)):
+                        root = root.value
+                    if isinstance(root, ast.Name) and root is not tgt \
+                            and root.id in globals_here:
+                        self.findings.append(Finding(
+                            "JIT002", mod.path, node.lineno, scope,
+                            f"mutates module-level '{root.id}' inside "
+                            f"jit-reachable code"))
+
+
+def check(project: Project) -> List[Finding]:
+    return JitChecker(project).check()

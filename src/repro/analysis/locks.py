@@ -1,0 +1,403 @@
+"""LOCK — lock-discipline checker.
+
+Builds the ``with Lock`` acquisition graph across every non-test module and
+enforces three rules:
+
+* **LOCK001** — no blocking call while holding a lock.  "Blocking" covers
+  socket send/recv/accept/connect, ``time.sleep``, ``Future.result``,
+  ``Event``/process ``wait``, ``queue.get``-style waits, thread ``join``,
+  ``subprocess`` spawns/waits, jit dispatch through a ``jax.jit``-built
+  attribute, and dynamic dispatch through a direct ``getattr(...)(...)``
+  call (the RPC pattern — the analyzer cannot see through it, and the
+  callee is a network round-trip in this codebase).  The check is
+  one-level interprocedural: a method that contains a blocking call is
+  itself blocking, transitively, where calls can be resolved.
+* **LOCK002** — no lock-order inversion: if one code path acquires A then
+  B, no path may acquire B then A (deadlock by schedule).
+* **LOCK003** — no re-entry hazard on a non-reentrant ``Lock``: acquiring
+  a lock already held on the same stack, calling a method that re-acquires
+  it, or registering a callback (``add_done_callback``) that may run
+  synchronously and re-acquire it.
+
+Lock identity is ``Owner.attr`` (declaring class, so subclasses share the
+base's identity) or ``Owner.attr[]`` for per-element lock lists; locals
+aliased from a lock list element (``lock = self._locks[i]``, including via
+``zip(self._locks, ...)`` tuple targets) resolve to the list identity.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import Finding, Module, call_name, dotted_name
+from repro.analysis.project import ClassInfo, Project
+
+_BLOCKING_ATTRS = {
+    "sendall": "socket send", "recv": "socket recv",
+    "accept": "socket accept", "connect": "socket connect",
+    "result": "Future.result wait", "communicate": "subprocess wait",
+    "wait_ready": "worker-spawn wait", "readline": "pipe read",
+    "wait": "event/process wait",
+}
+_BLOCKING_CALLS = {
+    "time.sleep": "time.sleep",
+    "socket.create_connection": "socket connect",
+    "select.select": "select wait",
+    "subprocess.run": "subprocess wait",
+    "subprocess.call": "subprocess wait",
+    "subprocess.check_call": "subprocess wait",
+    "subprocess.check_output": "subprocess wait",
+    "subprocess.Popen": "process spawn",
+}
+_CALLBACK_REGISTRARS = {"add_done_callback"}
+
+
+@dataclasses.dataclass
+class _Summary:
+    """What one method does, seen from a caller: does it block, which lock
+    identities does it (transitively) acquire, whom does it call."""
+
+    ref: str
+    blocking: Optional[str] = None
+    acquires: Set[str] = dataclasses.field(default_factory=set)
+    calls: Set[str] = dataclasses.field(default_factory=set)
+
+
+class _MethodScanner(ast.NodeVisitor):
+    """Single pass over one function: local alias/type maps, plus the raw
+    summary facts (direct blocking reason, acquired locks, resolved calls).
+    """
+
+    def __init__(self, checker: "LockChecker", module: Module,
+                 cls: Optional[str], qualname: str, fn: ast.AST):
+        self.checker = checker
+        self.project = checker.project
+        self.module = module
+        self.cls = cls
+        self.qualname = qualname
+        self.fn = fn
+        self.local_locks: Dict[str, str] = {}   # name -> lock identity
+        self.local_types: Dict[str, str] = {}   # name -> class name
+        self._collect_locals()
+
+    # ----------------------------------------------------- resolution --
+
+    def _collect_locals(self) -> None:
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                ident = self.lock_identity(node.value)
+                if ident:
+                    self.local_locks[name] = ident
+                    continue
+                t = self._value_type(node.value)
+                if t:
+                    self.local_types[name] = t
+            elif isinstance(node, ast.For) and isinstance(
+                    node.target, ast.Tuple):
+                # for lock, x in zip(self._locks, ...): ...
+                it = node.iter
+                if isinstance(it, ast.Call) and call_name(it) == "zip":
+                    for tgt, arg in zip(node.target.elts, it.args):
+                        if isinstance(tgt, ast.Name):
+                            ident = self._lock_list_identity(arg)
+                            if ident:
+                                self.local_locks[tgt.id] = ident
+
+    def _value_type(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            name = (call_name(node) or "").split(".")[-1]
+            if name in self.project.classes:
+                return name
+            if name in self.project.func_return_types:
+                return self.project.func_return_types[name]
+        return None
+
+    def _lock_list_identity(self, node: ast.AST) -> Optional[str]:
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and self.cls):
+            owner = self.project.lock_list_owner(self.cls, node.attr)
+            if owner:
+                return f"{owner}.{node.attr}[]"
+        return None
+
+    def lock_identity(self, node: ast.AST) -> Optional[str]:
+        """Lock identity of an expression, or None if it is not a lock."""
+        if isinstance(node, ast.Name):
+            return self.local_locks.get(node.id)
+        if isinstance(node, ast.Subscript):
+            return self._lock_list_identity(node.value)
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and self.cls):
+            owner = self.project.lock_attr_owner(self.cls, node.attr)
+            if owner:
+                return f"{owner}.{node.attr}"
+        return None
+
+    def receiver_type(self, node: ast.AST) -> Optional[str]:
+        """Best-effort type of a call receiver expression."""
+        if isinstance(node, ast.Name):
+            if node.id == "self":
+                return self.cls
+            return self.local_types.get(node.id)
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and self.cls):
+            return self.project.attr_type(self.cls, node.attr)
+        if isinstance(node, ast.Call):
+            return self._value_type(node)
+        return None
+
+    def resolve_call(self, call: ast.Call
+                     ) -> Optional[Tuple[str, ast.FunctionDef]]:
+        """``(ref, FunctionDef)`` for calls that reach project methods."""
+        if isinstance(call.func, ast.Attribute):
+            recv_type = self.receiver_type(call.func.value)
+            got = self.project.resolve_method(recv_type, call.func.attr)
+            if got:
+                return f"{got[0]}.{call.func.attr}", got[1]
+        elif isinstance(call.func, ast.Name) and self.cls is None:
+            fn = self.project.functions.get(
+                (self.module.path, call.func.id))
+            if fn is not None:
+                return f"{self.module.path}::{call.func.id}", fn
+        return None
+
+    # ------------------------------------------------------- blocking --
+
+    def blocking_reason(self, call: ast.Call) -> Optional[str]:
+        name = call_name(call)
+        if name in _BLOCKING_CALLS:
+            return _BLOCKING_CALLS[name]
+        if name and name.split(".")[-1] in ("Popen",):
+            return "process spawn"
+        if isinstance(call.func, ast.Call) \
+                and call_name(call.func) == "getattr":
+            return "dynamic dispatch via getattr(...)(...)"
+        if not isinstance(call.func, ast.Attribute):
+            return None
+        attr = call.func.attr
+        kwargs = {k.arg for k in call.keywords}
+        if attr in _BLOCKING_ATTRS:
+            return _BLOCKING_ATTRS[attr]
+        if attr == "get":
+            if kwargs & {"timeout", "block"} or not call.args:
+                return "queue get wait"
+        if attr == "join":
+            numeric = (len(call.args) == 1
+                       and isinstance(call.args[0], ast.Constant)
+                       and isinstance(call.args[0].value, (int, float)))
+            if "timeout" in kwargs or not call.args or numeric:
+                return "thread/process join"
+        if self.cls and isinstance(call.func.value, ast.Name) \
+                and call.func.value.id == "self":
+            for cls in self.project.class_and_bases(self.cls):
+                if attr in cls.jit_attrs:
+                    return "jit dispatch"
+        return None
+
+
+class LockChecker:
+    """Two-phase: summarise every method, close transitively, then replay
+    each method with a held-locks stack and emit findings."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.summaries: Dict[str, _Summary] = {}
+        self.blocking_star: Dict[str, str] = {}
+        self.acquires_star: Dict[str, Set[str]] = {}
+        #: (A, B) -> (path, line, scope) for "B acquired while holding A"
+        self.edges: Dict[Tuple[str, str], Tuple[str, int, str]] = {}
+        self.findings: List[Finding] = []
+        self._inversions_seen: Set[Tuple[str, str]] = set()
+
+    # -------------------------------------------------------- phase 1 --
+
+    def _each_method(self):
+        for mod in sorted(self.project.modules.values(),
+                          key=lambda m: m.path):
+            if mod.path.startswith("tests/") or "/tests/" in mod.path:
+                continue
+            if "/analysis/" in mod.path:
+                continue       # the linter does not lint itself
+            for qualname, cls, fn in mod.iter_scoped_functions():
+                yield mod, qualname, cls, fn
+
+    def _ref(self, mod: Module, cls: Optional[str], qualname: str) -> str:
+        return qualname if cls else f"{mod.path}::{qualname}"
+
+    def summarise(self) -> None:
+        for mod, qualname, cls, fn in self._each_method():
+            scanner = _MethodScanner(self, mod, cls, qualname, fn)
+            ref = self._ref(mod, cls, qualname)
+            s = _Summary(ref=ref)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.withitem):
+                    ident = scanner.lock_identity(node.context_expr)
+                    if ident:
+                        s.acquires.add(ident)
+                elif isinstance(node, ast.Call):
+                    if s.blocking is None:
+                        s.blocking = scanner.blocking_reason(node)
+                    got = scanner.resolve_call(node)
+                    if got:
+                        s.calls.add(got[0])
+            self.summaries[ref] = s
+        # fixpoint closure over "blocking" and "acquires"
+        changed = True
+        blocking = {r: s.blocking for r, s in self.summaries.items()
+                    if s.blocking}
+        acquires = {r: set(s.acquires) for r, s in self.summaries.items()}
+        while changed:
+            changed = False
+            for ref, s in self.summaries.items():
+                for callee in s.calls:
+                    if callee == ref:
+                        continue
+                    if callee in blocking and ref not in blocking:
+                        blocking[ref] = f"calls {callee} " \
+                                        f"({blocking[callee]})"
+                        changed = True
+                    extra = acquires.get(callee, set()) - acquires[ref]
+                    if extra:
+                        acquires[ref] |= extra
+                        changed = True
+        self.blocking_star = blocking
+        self.acquires_star = acquires
+
+    # -------------------------------------------------------- phase 2 --
+
+    def check(self) -> List[Finding]:
+        self.summarise()
+        for mod, qualname, cls, fn in self._each_method():
+            scanner = _MethodScanner(self, mod, cls, qualname, fn)
+            body = getattr(fn, "body", [])
+            self._walk(body, scanner, mod, qualname, held=[])
+        return self.findings
+
+    def _emit(self, code: str, mod: Module, line: int, scope: str,
+              message: str) -> None:
+        self.findings.append(Finding(code=code, path=mod.path, line=line,
+                                     scope=scope, message=message))
+
+    def _is_rlock(self, identity: str) -> bool:
+        owner, _, attr = identity.partition(".")
+        cls = self.project.classes.get(owner)
+        return bool(cls and attr.rstrip("[]") in cls.rlock_attrs)
+
+    def _record_edge(self, held_id: str, new_id: str, mod: Module,
+                     line: int, scope: str) -> None:
+        if held_id == new_id:
+            return
+        self.edges.setdefault((held_id, new_id), (mod.path, line, scope))
+        rev = self.edges.get((new_id, held_id))
+        if rev is not None:
+            pair = tuple(sorted((held_id, new_id)))
+            if pair not in self._inversions_seen:
+                self._inversions_seen.add(pair)
+                self._emit(
+                    "LOCK002", mod, line, scope,
+                    f"lock-order inversion: acquires {new_id} while "
+                    f"holding {held_id}, but {rev[0]}:{rev[1]} "
+                    f"[{rev[2]}] acquires them in the opposite order")
+
+    def _on_acquire(self, ident: str, held: List[str], mod: Module,
+                    line: int, scope: str) -> None:
+        for h in held:
+            self._record_edge(h, ident, mod, line, scope)
+        if ident in held and not self._is_rlock(ident):
+            self._emit("LOCK003", mod, line, scope,
+                       f"re-acquires non-reentrant {ident} already held "
+                       f"on this stack (self-deadlock)")
+
+    def _check_call(self, call: ast.Call, scanner: _MethodScanner,
+                    mod: Module, scope: str, held: List[str]) -> None:
+        reason = scanner.blocking_reason(call)
+        if reason is not None:
+            self._emit("LOCK001", mod, call.lineno, scope,
+                       f"blocking call ({reason}) while holding "
+                       f"{', '.join(held)}")
+            return
+        got = scanner.resolve_call(call)
+        if got is not None:
+            ref, _ = got
+            if ref != scope and ref in self.blocking_star:
+                self._emit("LOCK001", mod, call.lineno, scope,
+                           f"call to {ref} may block "
+                           f"({self.blocking_star[ref]}) while holding "
+                           f"{', '.join(held)}")
+            for a in sorted(self.acquires_star.get(ref, ())):
+                if a in held and not self._is_rlock(a):
+                    self._emit("LOCK003", mod, call.lineno, scope,
+                               f"call to {ref} re-acquires held {a} "
+                               f"(non-reentrant; self-deadlock)")
+                else:
+                    for h in held:
+                        self._record_edge(h, a, mod, call.lineno, scope)
+        # Callback registration under a lock: the registrar may invoke the
+        # callback synchronously (a done Future runs it inline).
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in _CALLBACK_REGISTRARS:
+            for arg in call.args:
+                for node in ast.walk(arg):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    cb = scanner.resolve_call(node)
+                    if cb is None:
+                        continue
+                    hit = self.acquires_star.get(cb[0], set()) & set(held)
+                    for a in sorted(hit):
+                        if not self._is_rlock(a):
+                            self._emit(
+                                "LOCK003", mod, call.lineno, scope,
+                                f"callback registered while holding {a} "
+                                f"may run synchronously and re-acquire it "
+                                f"via {cb[0]}")
+
+    def _scan_exprs(self, node: ast.AST, scanner: _MethodScanner,
+                    mod: Module, scope: str, held: List[str]) -> None:
+        """Flag calls in an expression subtree (held locks active)."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self._check_call(sub, scanner, mod, scope, held)
+
+    def _walk(self, stmts, scanner: _MethodScanner, mod: Module,
+              scope: str, held: List[str]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                acquired_here: List[str] = []
+                for item in stmt.items:
+                    ident = scanner.lock_identity(item.context_expr)
+                    if ident:
+                        self._on_acquire(ident, held + acquired_here,
+                                         mod, item.context_expr.lineno,
+                                         scope)
+                        acquired_here.append(ident)
+                    elif held:
+                        self._scan_exprs(item.context_expr, scanner, mod,
+                                         scope, held + acquired_here)
+                self._walk(stmt.body, scanner, mod, scope,
+                           held + acquired_here)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                continue    # nested defs run later, not under this lock
+            else:
+                if held:
+                    for field in ast.iter_child_nodes(stmt):
+                        if isinstance(field, (ast.stmt, ast.excepthandler)):
+                            continue
+                        self._scan_exprs(field, scanner, mod, scope, held)
+                for attr in ("body", "orelse", "finalbody"):
+                    sub = getattr(stmt, attr, None)
+                    if sub:
+                        self._walk(sub, scanner, mod, scope, held)
+                for handler in getattr(stmt, "handlers", []) or []:
+                    self._walk(handler.body, scanner, mod, scope, held)
+
+
+def check(project: Project) -> List[Finding]:
+    return LockChecker(project).check()

@@ -1,0 +1,119 @@
+"""OPS — ops-algebra purity checker.
+
+The declarative ranking algebra (``core/ops.py``) is the one place the
+whole stack agrees on: plans are hashed, pickled across processes, used as
+dict keys, and compared structurally.  That only holds while every node is
+a frozen dataclass and nothing mutates anything:
+
+* **OPS001** — every class in the ops module must be a
+  ``@dataclass(frozen=True)`` (exception types excluded);
+* **OPS002** — no ``self.attr = ...`` assignment anywhere in the module
+  (frozen dataclasses initialise via ``__post_init__`` +
+  ``object.__setattr__`` only);
+* **OPS003** — ``object.__setattr__`` / ``setattr`` only inside
+  ``__post_init__`` (the blessed canonicalisation hook);
+* **OPS004** — functions (``normalize`` above all) stay side-effect-free:
+  no ``global``/``nonlocal``, and no assignment through a parameter
+  (``node.x = ...``, ``items[0] = ...`` where the root is an argument).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.base import (Finding, Module, call_name, dotted_name,
+                                 walk_in_scope)
+from repro.analysis.project import Project
+
+
+def _dataclass_decorator(cls: ast.ClassDef) -> Optional[ast.AST]:
+    for dec in cls.decorator_list:
+        name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if name and name.split(".")[-1] == "dataclass":
+            return dec
+    return None
+
+
+def _is_frozen(dec: ast.AST) -> bool:
+    if not isinstance(dec, ast.Call):
+        return False
+    for kw in dec.keywords:
+        if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return False
+
+
+def _is_exception_class(cls: ast.ClassDef) -> bool:
+    for base in cls.bases:
+        name = (dotted_name(base) or "").split(".")[-1]
+        if name.endswith(("Error", "Exception")):
+            return True
+    return False
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    mod = project.module_by_suffix("core/ops.py", "/ops.py", "ops.py")
+    if mod is None:
+        return findings
+
+    for node in mod.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if _is_exception_class(node):
+            continue
+        dec = _dataclass_decorator(node)
+        if dec is None:
+            findings.append(Finding(
+                "OPS001", mod.path, node.lineno, node.name,
+                f"ops node {node.name} is not a dataclass — plans must "
+                f"stay hashable/picklable value objects"))
+        elif not _is_frozen(dec):
+            findings.append(Finding(
+                "OPS001", mod.path, node.lineno, node.name,
+                f"ops node {node.name} is a mutable dataclass — "
+                f"declare it @dataclass(frozen=True)"))
+
+    for qualname, cls, fn in mod.iter_scoped_functions():
+        in_post_init = fn.name == "__post_init__"
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)} - {"self", "cls"}
+        for node in walk_in_scope(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if isinstance(tgt, ast.Attribute) \
+                            and isinstance(tgt.value, ast.Name) \
+                            and tgt.value.id == "self":
+                        findings.append(Finding(
+                            "OPS002", mod.path, node.lineno, qualname,
+                            f"direct attribute assignment self."
+                            f"{tgt.attr} = ... mutates an ops node"))
+                    elif isinstance(tgt, (ast.Attribute, ast.Subscript)) \
+                            and _root_name(tgt) in params:
+                        findings.append(Finding(
+                            "OPS004", mod.path, node.lineno, qualname,
+                            f"assignment through parameter "
+                            f"'{_root_name(tgt)}' — ops functions must "
+                            f"not mutate their inputs"))
+            elif isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                if name in ("object.__setattr__", "setattr") \
+                        and not in_post_init:
+                    findings.append(Finding(
+                        "OPS003", mod.path, node.lineno, qualname,
+                        f"{name} outside __post_init__ mutates a frozen "
+                        f"ops node"))
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                findings.append(Finding(
+                    "OPS004", mod.path, node.lineno, qualname,
+                    f"{'global' if isinstance(node, ast.Global) else 'nonlocal'}"
+                    f" statement — ops functions must be side-effect-free"))
+    return findings

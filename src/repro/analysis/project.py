@@ -1,0 +1,228 @@
+"""Project-wide symbol tables for repro-lint.
+
+The checkers need just enough cross-module knowledge to be useful without a
+real type system:
+
+* which ``self.X`` attributes are ``threading.Lock``/``RLock`` objects (or
+  lists of them), per class — found from constructor assignments;
+* a light attribute-type map (``self.client = service.Client(...)`` means
+  ``client`` is a ``Client``), extended by ``Optional[T]`` annotations and
+  by module-level functions with a class return annotation
+  (``get_tracer() -> Tracer``);
+* which class defines a given method name, for the "unique attribute name"
+  call-resolution rule (skip when two classes both define ``.observe``).
+
+Everything here is intentionally heuristic: resolution that cannot be done
+confidently returns ``None`` and the checker stays silent rather than
+guessing.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import Module, call_name, dotted_name
+
+_LOCK_CTORS = {"threading.Lock", "threading.RLock", "Lock", "RLock"}
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and call_name(node) in _LOCK_CTORS)
+
+
+def _annotation_class(node: Optional[ast.AST]) -> Optional[str]:
+    """Class name out of ``T``, ``"T"``, or ``Optional[T]`` annotations."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.strip('"')
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Subscript):
+        base = dotted_name(node.value) or ""
+        if base.split(".")[-1] == "Optional":
+            return _annotation_class(node.slice)
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class ClassInfo:
+    def __init__(self, name: str, module: Module, node: ast.ClassDef):
+        self.name = name
+        self.module = module
+        self.node = node
+        self.bases: List[str] = [
+            (dotted_name(b) or "").split(".")[-1] for b in node.bases]
+        self.methods: Dict[str, ast.FunctionDef] = {}
+        self.lock_attrs: Set[str] = set()       # self.X = Lock()
+        self.rlock_attrs: Set[str] = set()      # self.X = RLock()
+        self.lock_list_attrs: Set[str] = set()  # self.X = [Lock() ...]
+        self.attr_types: Dict[str, str] = {}    # self.X = ClassName(...)
+        self.jit_attrs: Set[str] = set()        # self.X = jax.jit(...)
+        for child in node.body:
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.methods[child.name] = child
+        self._scan_attributes()
+
+    def _scan_attributes(self) -> None:
+        for fn in self.methods.values():
+            for stmt in ast.walk(fn):
+                target = value = None
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                    target, value = stmt.targets[0], stmt.value
+                elif isinstance(stmt, ast.AnnAssign):
+                    target, value = stmt.target, stmt.value
+                else:
+                    continue
+                if not (isinstance(target, ast.Attribute)
+                        and isinstance(target.value, ast.Name)
+                        and target.value.id == "self"):
+                    continue
+                attr = target.attr
+                if _is_lock_ctor(value):
+                    self.lock_attrs.add(attr)
+                    if (call_name(value) or "").endswith("RLock"):
+                        self.rlock_attrs.add(attr)
+                elif isinstance(value, (ast.ListComp, ast.List)):
+                    elts = ([value.elt] if isinstance(value, ast.ListComp)
+                            else value.elts)
+                    if elts and all(_is_lock_ctor(e) for e in elts):
+                        self.lock_list_attrs.add(attr)
+                elif isinstance(value, ast.Call):
+                    name = call_name(value) or ""
+                    if name in ("jax.jit", "jit"):
+                        self.jit_attrs.add(attr)
+                    else:
+                        self.attr_types[attr] = name.split(".")[-1]
+                if (isinstance(stmt, ast.AnnAssign)
+                        and attr not in self.attr_types):
+                    cls = _annotation_class(stmt.annotation)
+                    if cls:
+                        self.attr_types.setdefault(attr, cls)
+
+
+class Project:
+    """All parsed modules plus the derived symbol tables."""
+
+    def __init__(self, root: str, rel_paths: Optional[List[str]] = None):
+        self.root = root
+        self.modules: Dict[str, Module] = {}
+        for rel in (rel_paths if rel_paths is not None
+                    else self._discover(root)):
+            try:
+                mod = Module(root, rel)
+            except (SyntaxError, UnicodeDecodeError):
+                continue
+            self.modules[mod.path] = mod
+        self.classes: Dict[str, ClassInfo] = {}
+        self.functions: Dict[Tuple[str, str], ast.FunctionDef] = {}
+        self.func_return_types: Dict[str, str] = {}
+        for mod in self.modules.values():
+            for child in mod.tree.body:
+                if isinstance(child, ast.ClassDef):
+                    self.classes[child.name] = ClassInfo(
+                        child.name, mod, child)
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    self.functions[(mod.path, child.name)] = child
+                    ret = _annotation_class(child.returns)
+                    if ret:
+                        self.func_return_types[child.name] = ret
+        # method name -> classes defining it (for unique-name resolution)
+        self.method_owners: Dict[str, List[ClassInfo]] = {}
+        for cls in self.classes.values():
+            for m in cls.methods:
+                self.method_owners.setdefault(m, []).append(cls)
+
+    @staticmethod
+    def _discover(root: str) -> List[str]:
+        rels: List[str] = []
+        # A conventional src/ layout confines the scan to src/ + tests/
+        # (skipping venvs, build dirs, benchmark outputs at the root);
+        # anything else — fixture trees above all — is walked whole.
+        if os.path.isdir(os.path.join(root, "src")):
+            walk_roots = [d for d in ("src", "tests")
+                          if os.path.isdir(os.path.join(root, d))]
+        else:
+            walk_roots = [""]
+        for wr in walk_roots:
+            for dirpath, dirnames, filenames in os.walk(
+                    os.path.join(root, wr)):
+                dirnames[:] = [d for d in dirnames
+                               if not d.startswith(".")
+                               and d != "__pycache__"]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        rels.append(os.path.relpath(
+                            os.path.join(dirpath, fn), root))
+        return sorted(rels)
+
+    # -------------------------------------------------------- lookups --
+
+    def module_by_suffix(self, *suffixes: str) -> Optional[Module]:
+        """First non-test module whose path ends with one of ``suffixes``
+        — tried in order, so callers list the most specific first."""
+        for suf in suffixes:
+            for path, mod in sorted(self.modules.items()):
+                if path.startswith("tests/") or "/tests/" in path:
+                    continue
+                if path.endswith(suf):
+                    return mod
+        return None
+
+    def class_and_bases(self, name: str):
+        """The class plus its (resolvable) base chain, subclass first."""
+        out: List[ClassInfo] = []
+        seen: Set[str] = set()
+        stack = [name]
+        while stack:
+            n = stack.pop(0)
+            if n in seen:
+                continue
+            seen.add(n)
+            cls = self.classes.get(n)
+            if cls is None:
+                continue
+            out.append(cls)
+            stack.extend(cls.bases)
+        return out
+
+    def lock_attr_owner(self, cls_name: str, attr: str) -> Optional[str]:
+        """Class (possibly a base) that declares ``attr`` as a lock."""
+        for cls in self.class_and_bases(cls_name):
+            if attr in cls.lock_attrs:
+                return cls.name
+        return None
+
+    def lock_list_owner(self, cls_name: str, attr: str) -> Optional[str]:
+        for cls in self.class_and_bases(cls_name):
+            if attr in cls.lock_list_attrs:
+                return cls.name
+        return None
+
+    def attr_type(self, cls_name: str, attr: str) -> Optional[str]:
+        for cls in self.class_and_bases(cls_name):
+            if attr in cls.attr_types:
+                return cls.attr_types[attr]
+        return None
+
+    def resolve_method(self, cls_name: Optional[str],
+                       method: str) -> Optional[Tuple[str, ast.FunctionDef]]:
+        """``(owner_class, FunctionDef)`` for a method call.
+
+        With a receiver type, walk its MRO. Without one, fall back to the
+        unique-name rule: resolve only if exactly ONE project class defines
+        the method (ambiguous names like ``observe`` stay unresolved).
+        """
+        if cls_name is not None:
+            for cls in self.class_and_bases(cls_name):
+                if method in cls.methods:
+                    return cls.name, cls.methods[method]
+            return None
+        owners = self.method_owners.get(method, [])
+        if len(owners) == 1:
+            return owners[0].name, owners[0].methods[method]
+        return None

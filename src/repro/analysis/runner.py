@@ -1,0 +1,106 @@
+"""repro-lint driver: run every checker, apply suppressions, report.
+
+Usage (what ``scripts/lint.sh`` runs)::
+
+    PYTHONPATH=src python -m repro.analysis --root . \\
+        --baseline scripts/lint_baseline.txt
+
+Exit status is 0 when every finding is suppressed (inline allow or
+baseline entry) and 1 otherwise, so the tier-1 script can use it as a hard
+gate.  Stale baseline entries — suppressions whose finding no longer fires
+— are reported as warnings but do not fail the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Callable, Dict, List, Optional
+
+from repro.analysis import (jit_check, locks, ops_check, telemetry_check,
+                            wires)
+from repro.analysis.base import Baseline, Finding
+from repro.analysis.project import Project
+
+CHECKERS: Dict[str, Callable[[Project], List[Finding]]] = {
+    "LOCK": locks.check,
+    "WIRE": wires.check,
+    "TEL": telemetry_check.check,
+    "OPS": ops_check.check,
+    "JIT": jit_check.check,
+}
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]            #: unsuppressed — these fail the gate
+    suppressed: List[Finding]
+    stale_baseline: List
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def run(root: str, baseline_path: Optional[str] = None,
+        checks: Optional[List[str]] = None,
+        project: Optional[Project] = None) -> LintResult:
+    project = project if project is not None else Project(root)
+    baseline = (Baseline.load(baseline_path) if baseline_path
+                else Baseline())
+    raw: List[Finding] = []
+    for name in (checks or sorted(CHECKERS)):
+        raw.extend(CHECKERS[name](project))
+    raw.sort(key=lambda f: (f.path, f.line, f.code))
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in raw:
+        mod = project.modules.get(f.path)
+        if mod is not None and mod.allowed(f.code, f.line):
+            suppressed.append(f)
+        elif baseline.suppress(f):
+            suppressed.append(f)
+        else:
+            findings.append(f)
+    return LintResult(findings=findings, suppressed=suppressed,
+                      stale_baseline=baseline.stale_entries())
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST-based invariant checker for this repo")
+    parser.add_argument("--root", default=".",
+                        help="repository root to analyse")
+    parser.add_argument("--baseline", default=None,
+                        help="suppression baseline file")
+    parser.add_argument("--checks", default=None,
+                        help="comma-separated checker subset "
+                             f"(default: all of {','.join(sorted(CHECKERS))})")
+    parser.add_argument("--show-suppressed", action="store_true",
+                        help="also print suppressed findings")
+    args = parser.parse_args(argv)
+
+    checks = None
+    if args.checks:
+        checks = [c.strip().upper() for c in args.checks.split(",")
+                  if c.strip()]
+        unknown = [c for c in checks if c not in CHECKERS]
+        if unknown:
+            print(f"repro-lint: unknown checker(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    result = run(args.root, baseline_path=args.baseline, checks=checks)
+    for f in result.findings:
+        print(f.render())
+    if args.show_suppressed:
+        for f in result.suppressed:
+            print(f"(suppressed) {f.render()}")
+    for entry in result.stale_baseline:
+        print(f"repro-lint: warning: stale baseline entry "
+              f"(finding no longer fires): {entry.code} "
+              f"{entry.path}::{entry.scope}", file=sys.stderr)
+    n, s = len(result.findings), len(result.suppressed)
+    print(f"repro-lint: {n} finding(s), {s} suppressed", file=sys.stderr)
+    return 0 if result.ok else 1

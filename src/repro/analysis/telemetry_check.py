@@ -1,0 +1,162 @@
+"""TEL — telemetry hygiene checker.
+
+* **TEL001** — every ``Tracer.span(...)`` / ``Tracer.activate(...)`` call
+  must be used as a context manager: directly in a ``with`` item, returned
+  to the caller (the call site then owns the ``with``), or assigned to a
+  local that a later ``with`` in the same function enters.  A span opened
+  and never closed corrupts the thread-local span stack for every request
+  that thread serves afterwards.
+* **TEL002** — metric names passed to ``MetricsRegistry.inc`` /
+  ``observe`` / ``set_gauge`` must be static string literals.  An f-string
+  or computed name turns a bounded metrics table into an unbounded one
+  (cardinality explosion) and breaks dashboard queries.  Labels carry the
+  dynamic parts; the *name* never does.
+
+Receivers are resolved through light type inference (constructor
+assignments, ``Optional[T]`` annotations, ``get_tracer() -> Tracer``-style
+return annotations), with a naming fallback (``tracer``/``registry``
+locals) for code the inference cannot see through.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import Finding, Module, call_name, walk_in_scope
+from repro.analysis.project import Project
+
+_SPAN_METHODS = {"span", "activate"}
+_METRIC_METHODS = {"inc", "observe", "set_gauge"}
+_TRACERISH = {"tracer", "_tracer"}
+_REGISTRYISH = {"registry", "_registry", "reg"}
+
+
+class _Types:
+    """Per-function receiver-type resolution (same rules everywhere)."""
+
+    def __init__(self, project: Project, cls: Optional[str], fn: ast.AST):
+        self.project = project
+        self.cls = cls
+        self.locals: Dict[str, str] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                t = self.value_type(node.value)
+                if t:
+                    self.locals[node.targets[0].id] = t
+
+    def value_type(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            name = (call_name(node) or "").split(".")[-1]
+            if name in self.project.classes:
+                return name
+            return self.project.func_return_types.get(name)
+        return None
+
+    def receiver_type(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            if node.id == "self":
+                return self.cls
+            return self.locals.get(node.id)
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and self.cls):
+            return self.project.attr_type(self.cls, node.attr)
+        if isinstance(node, ast.Call):
+            return self.value_type(node)
+        return None
+
+
+def _receiver_matches(types: _Types, recv: ast.AST, wanted: Set[str],
+                      nameish: Set[str]) -> bool:
+    t = types.receiver_type(recv)
+    if t is not None:
+        return t in wanted
+    if isinstance(recv, ast.Name):
+        return recv.id.lower() in nameish
+    if isinstance(recv, ast.Attribute):
+        return recv.attr.lower() in nameish
+    return False
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    tracer_types = {"Tracer"}
+    registry_types = {"MetricsRegistry"}
+    for fn_name, wanted in (("get_tracer", tracer_types),
+                            ("get_registry", registry_types)):
+        ret = project.func_return_types.get(fn_name)
+        if ret:
+            wanted.add(ret)
+
+    for mod in sorted(project.modules.values(), key=lambda m: m.path):
+        if mod.path.startswith("tests/") or "/tests/" in mod.path:
+            continue
+        if "/analysis/" in mod.path:
+            continue
+        telemetry_mod = mod.path.endswith("telemetry.py")
+        for qualname, cls, fn in mod.iter_scoped_functions():
+            types = _Types(project, cls, fn)
+
+            span_calls: List[ast.Call] = []
+            sanctioned: Set[int] = set()
+            with_entered_names: Set[str] = set()
+            assigned: List[tuple] = []
+
+            for node in walk_in_scope(fn):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SPAN_METHODS \
+                        and _receiver_matches(types, node.func.value,
+                                              tracer_types, _TRACERISH):
+                    span_calls.append(node)
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    for item in node.items:
+                        if isinstance(item.context_expr, ast.Call):
+                            sanctioned.add(id(item.context_expr))
+                        elif isinstance(item.context_expr, ast.Name):
+                            with_entered_names.add(item.context_expr.id)
+                if isinstance(node, ast.Return) \
+                        and isinstance(node.value, ast.Call):
+                    sanctioned.add(id(node.value))
+                if isinstance(node, ast.Assign) \
+                        and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and isinstance(node.value, ast.Call):
+                    assigned.append((node.targets[0].id, node.value))
+
+            for name, call in assigned:
+                if name in with_entered_names:
+                    sanctioned.add(id(call))
+            for call in span_calls:
+                if id(call) not in sanctioned:
+                    findings.append(Finding(
+                        "TEL001", mod.path, call.lineno, qualname,
+                        f".{call.func.attr}(...) opened outside a 'with' "
+                        f"— the span is never closed on error paths and "
+                        f"the thread-local span stack leaks"))
+
+            if telemetry_mod:
+                continue    # the registry's own internals take values,
+                            # not metric names, in these method names
+            for node in walk_in_scope(fn):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _METRIC_METHODS):
+                    continue
+                if not _receiver_matches(types, node.func.value,
+                                         registry_types, _REGISTRYISH):
+                    continue
+                if not node.args:
+                    continue
+                key = node.args[0]
+                if not (isinstance(key, ast.Constant)
+                        and isinstance(key.value, str)):
+                    kind = ("f-string" if isinstance(key, ast.JoinedStr)
+                            else type(key).__name__)
+                    findings.append(Finding(
+                        "TEL002", mod.path, node.lineno, qualname,
+                        f"metric name passed to .{node.func.attr}() is a "
+                        f"{kind}, not a static string literal — dynamic "
+                        f"names explode metric cardinality (use labels)"))
+    return findings

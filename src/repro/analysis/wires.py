@@ -1,0 +1,190 @@
+"""WIRE — wire-protocol conformance checker.
+
+For every ``MSG_*`` constant defined in the wire module:
+
+* **WIRE001** — some ``encode_*`` function must reference it (every frame
+  type can be produced);
+* **WIRE002** — some ``decode_*`` function must reference it (every frame
+  type can be consumed, or at least rejected with a typed error);
+* **WIRE003** — request-type constants (value < 100) must be reachable
+  from the server's ``_serve_connection`` dispatch — directly or through
+  the wire helpers it calls (``decode_request_meta`` referencing
+  ``MSG_GET_SCORE`` counts: the dispatch arm lives behind that call);
+* **WIRE004** — a truncation-fuzz test (a test function whose name
+  mentions ``fuzz`` or ``trunc``) must cover the frame type, either by
+  naming the constant or by fuzzing an encoder that emits it.
+
+Independently, **WIRE005** flags any ``struct.unpack``/``unpack_from``
+call in non-test code that is not inside the guarded helper (a function
+that catches ``struct.error`` and re-raises ``ValueError``) — the typed
+protocol-error path requires every decode failure to be a ``ValueError``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import (Finding, Module, call_name, dotted_name,
+                                 names_referenced)
+from repro.analysis.project import Project
+
+_REPLY_THRESHOLD = 100   # MSG values >= 100 are server->client frames
+
+
+def _msg_constants(wire_mod: Module) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in wire_mod.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id.startswith("MSG_") \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, int):
+            out[node.targets[0].id] = node.value.value
+    return out
+
+
+def _const_lines(wire_mod: Module) -> Dict[str, int]:
+    lines: Dict[str, int] = {}
+    for node in wire_mod.tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            lines[node.targets[0].id] = node.lineno
+    return lines
+
+
+def _functions(mod: Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in mod.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _reference_closure(start: ast.AST,
+                       funcs: Dict[str, ast.FunctionDef]) -> Set[str]:
+    """All names referenced from ``start``, expanding through any
+    referenced name that is itself a known function."""
+    seen_funcs: Set[str] = set()
+    refs: Set[str] = set()
+    frontier = [start]
+    while frontier:
+        node = frontier.pop()
+        for name in names_referenced(node):
+            if name not in refs:
+                refs.add(name)
+                fn = funcs.get(name)
+                if fn is not None and name not in seen_funcs:
+                    seen_funcs.add(name)
+                    frontier.append(fn)
+    return refs
+
+
+def _guards_struct_error(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.ExceptHandler) and node.type is not None:
+            types = [node.type]
+            if isinstance(node.type, ast.Tuple):
+                types = list(node.type.elts)
+            for t in types:
+                if (dotted_name(t) or "").endswith("struct.error"):
+                    return True
+    return False
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    wire_mod = project.module_by_suffix("core/wire.py", "/wire.py",
+                                        "wire.py")
+    if wire_mod is None:
+        return findings
+    consts = _msg_constants(wire_mod)
+    lines = _const_lines(wire_mod)
+    wire_funcs = _functions(wire_mod)
+    encoders = {n: f for n, f in wire_funcs.items()
+                if n.startswith("encode_")}
+    decoders = {n: f for n, f in wire_funcs.items()
+                if n.startswith("decode_")}
+    encoder_refs = {n: names_referenced(f) for n, f in encoders.items()}
+    decoder_refs = {n: names_referenced(f) for n, f in decoders.items()}
+
+    # WIRE003 closure from the server dispatch, through wire helpers.
+    dispatch_refs: Optional[Set[str]] = None
+    service_mod = project.module_by_suffix("core/service.py",
+                                           "/service.py", "service.py")
+    if service_mod is not None:
+        service_funcs = _functions(service_mod)
+        serve = service_funcs.get("_serve_connection")
+        if serve is not None:
+            dispatch_refs = _reference_closure(
+                serve, {**wire_funcs, **service_funcs})
+
+    # WIRE004: names visible from truncation-fuzz tests.
+    fuzz_refs: Set[str] = set()
+    have_tests = False
+    for mod in project.modules.values():
+        if not (mod.path.startswith("tests/") or "/tests/" in mod.path):
+            continue
+        for qualname, _cls, fn in mod.iter_scoped_functions():
+            low = fn.name.lower()
+            if not fn.name.startswith("test"):
+                continue
+            have_tests = True
+            if "fuzz" in low or "trunc" in low:
+                fuzz_refs |= names_referenced(fn)
+
+    for name, value in sorted(consts.items(), key=lambda kv: kv[1]):
+        line = lines.get(name, 1)
+        if not any(name in refs for refs in encoder_refs.values()):
+            findings.append(Finding(
+                "WIRE001", wire_mod.path, line, "<module>",
+                f"{name} has no encode_* function referencing it"))
+        if not any(name in refs for refs in decoder_refs.values()):
+            findings.append(Finding(
+                "WIRE002", wire_mod.path, line, "<module>",
+                f"{name} has no decode_* function referencing it"))
+        if dispatch_refs is not None and value < _REPLY_THRESHOLD \
+                and name not in dispatch_refs:
+            findings.append(Finding(
+                "WIRE003", wire_mod.path, line, "<module>",
+                f"request type {name} is not reachable from the "
+                f"_serve_connection dispatch"))
+        if have_tests:
+            covered = name in fuzz_refs or any(
+                enc in fuzz_refs and name in encoder_refs[enc]
+                for enc in encoders)
+            if not covered:
+                findings.append(Finding(
+                    "WIRE004", wire_mod.path, line, "<module>",
+                    f"{name} has no truncation-fuzz test coverage "
+                    f"(no fuzz/trunc test references it or an encoder "
+                    f"that emits it)"))
+
+    # WIRE005: unguarded struct.unpack in any non-test module.
+    for mod in sorted(project.modules.values(), key=lambda m: m.path):
+        if mod.path.startswith("tests/") or "/tests/" in mod.path:
+            continue
+        if "/analysis/" in mod.path:
+            continue
+        guarded_spans: List[tuple] = []
+        scopes: List[tuple] = []
+        for qualname, _cls, fn in mod.iter_scoped_functions():
+            end = getattr(fn, "end_lineno", fn.lineno)
+            scopes.append((fn.lineno, end, qualname))
+            if _guards_struct_error(fn):
+                guarded_spans.append((fn.lineno, end))
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node) or ""
+            if name not in ("struct.unpack", "struct.unpack_from"):
+                continue
+            if any(lo <= node.lineno <= hi for lo, hi in guarded_spans):
+                continue
+            scope = "<module>"
+            best = -1
+            for lo, hi, qn in scopes:
+                if lo <= node.lineno <= hi and lo > best:
+                    scope, best = qn, lo
+            findings.append(Finding(
+                "WIRE005", mod.path, node.lineno, scope,
+                f"raw {name} outside the struct.error-guarded helper — "
+                f"truncated input raises struct.error, not the typed "
+                f"ValueError the protocol promises"))
+    return findings

@@ -387,7 +387,7 @@ def read_frame(sock: socket.socket) -> Tuple[int, bytes]:
     head = _read_exact(sock, 5)  # a timeout HERE means genuinely idle
     if not head:
         return 0, b""
-    n, t = struct.unpack("<IB", head)
+    n, t = _unpack_from("<IB", head, 0)
     if n > MAX_FRAME:
         raise ValueError(f"frame length {n} exceeds MAX_FRAME {MAX_FRAME}")
     try:

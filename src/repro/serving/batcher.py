@@ -117,9 +117,12 @@ class MicroBatcher:
                                                        "stopped"))
                 return item.future
             self._outstanding_rows += item.n
-            item.future.add_done_callback(
-                lambda _f, n=item.n: self._settle(n))
             self._q.put(item)
+        # Registered OUTSIDE the lock: a Future that is already done runs
+        # callbacks synchronously on the registering thread, and _settle
+        # re-takes the non-reentrant lock — under the lock this is a
+        # self-deadlock whenever the batch loop beats us to the future.
+        item.future.add_done_callback(lambda _f, n=item.n: self._settle(n))
         return item.future
 
     def _settle(self, n: int):

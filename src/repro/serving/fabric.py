@@ -382,7 +382,14 @@ class Fabric:
         self.respawns = 0
         self._stopping = threading.Event()
         self._monitor: Optional[threading.Thread] = None
+        # Guards only the tiny bookkeeping sections (respawn counter, the
+        # claimed-slot set). Slot respawns follow claim-then-work: a slot
+        # is CLAIMED under this lock, but the slow part — process spawn,
+        # readiness wait, endpoint swap, probe — runs with the lock
+        # released, so stats/metrics/other slots never stall behind a
+        # respawn that can take spawn_timeout_s.
         self._lock = threading.Lock()
+        self._respawning: set = set()
 
     # -------------------------------------------------------- lifecycle --
 
@@ -437,8 +444,23 @@ class Fabric:
                         if self._stopping.is_set():
                             return
 
-    def _respawn(self, w: FabricWorker) -> None:
+    def _claim_slot(self, slot: int) -> bool:
+        """Mark one slot as mid-respawn; False if already claimed (the
+        monitor and an explicit restart_worker racing on the same slot)."""
         with self._lock:
+            if slot in self._respawning:
+                return False
+            self._respawning.add(slot)
+            return True
+
+    def _release_slot(self, slot: int) -> None:
+        with self._lock:
+            self._respawning.discard(slot)
+
+    def _respawn(self, w: FabricWorker) -> None:
+        if not self._claim_slot(w.slot):
+            return
+        try:
             if self._stopping.is_set() or w.alive:
                 return
             w.spawn()
@@ -446,8 +468,11 @@ class Fabric:
             assert self.router is not None
             self.router.replace_endpoint(w.slot,
                                          WorkerEndpoint(w.slot, address))
-            self.respawns += 1
+            with self._lock:
+                self.respawns += 1
             self.router.probe_once()
+        finally:
+            self._release_slot(w.slot)
 
     # ------------------------------------------------- drain / restart ---
 
@@ -477,14 +502,19 @@ class Fabric:
         """Drain -> terminate -> respawn -> rejoin for one slot; returns
         the respawned worker's new address."""
         w = self.workers[slot]
-        self.drain_worker(slot, timeout_s=timeout_s)
-        w.terminate()
-        with self._lock:
+        if not self._claim_slot(slot):
+            raise RuntimeError(f"worker {slot} is already restarting")
+        try:
+            self.drain_worker(slot, timeout_s=timeout_s)
+            w.terminate()
             w.spawn()
             address = w.wait_ready(self.spawn_timeout_s)
             assert self.router is not None
-            self.router.replace_endpoint(slot, WorkerEndpoint(slot, address))
+            self.router.replace_endpoint(slot, WorkerEndpoint(slot,
+                                                              address))
             self.router.probe_once()    # fresh worker is routable again
+        finally:
+            self._release_slot(slot)
         return address
 
     # ----------------------------------------------------------- status --

@@ -88,12 +88,20 @@ class HedgedTransport:
                 with tracer.span(f"hedge.{role}", endpoint=idx,
                                  method=method) as sp:
                     try:
+                        # The RPC stays under the endpoint lock by design:
+                        # a losing attempt keeps the framed stream to
+                        # itself until its reply is fully read (see module
+                        # docstring) — the lock IS the drain barrier.
                         val = getattr(self._transports[idx], method)(*args)
                     except Exception as e:  # noqa: BLE001 — raced, judged
                         sp.set_attr("error", type(e).__name__)
                         results.put((idx, e, None))
                         return
-            self.tracker.observe(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+        # Bookkeeping runs after the endpoint lock is released: the tracker
+        # and meta locks are only ever taken bare, never nested inside an
+        # endpoint lock, so a draining loser cannot stall stats readers.
+        self.tracker.observe(dt)
         with self._meta:
             self._observed += 1
         results.put((idx, None, val))
@@ -101,14 +109,22 @@ class HedgedTransport:
     def _pick_endpoints(self) -> "tuple":
         """Choose ``(primary, backup)`` endpoint indices for one request;
         ``backup is None`` means there is nothing to hedge to. The base
-        policy is round-robin primary with the next endpoint as backup;
-        subclasses route on live signals instead (``fabric.HealthRouter``
-        picks the least-loaded healthy workers from MSG_HEALTH probes)."""
+        policy is round-robin skewed away from busy endpoints: one whose
+        lock is currently held (a request in flight, or a losing attempt
+        still draining its reply) is only chosen when every endpoint is
+        busy — a fresh request should not queue behind a drain it could
+        simply avoid. Subclasses route on live signals instead
+        (``fabric.HealthRouter`` picks the least-loaded healthy workers
+        from MSG_HEALTH probes)."""
         n = len(self._transports)
         with self._meta:
-            primary = self._rr % n
+            start = self._rr % n
             self._rr += 1
-        return primary, ((primary + 1) % n if n > 1 else None)
+        order = [(start + i) % n for i in range(n)]
+        free = [i for i in order if not self._locks[i].locked()]
+        busy = [i for i in order if i not in free]
+        ranked = free + busy
+        return ranked[0], (ranked[1] if n > 1 else None)
 
     def _call(self, method: str, args: tuple):
         primary, backup = self._pick_endpoints()

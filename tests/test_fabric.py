@@ -214,6 +214,88 @@ def test_health_router_spreads_ties_round_robin():
     assert primaries == {0, 1}              # an idle fleet still spreads
 
 
+class _StubRestartWorker:
+    """FabricWorker stand-in whose wait_ready parks on an event, so a test
+    can hold a respawn mid-flight and inspect the fabric's lock state."""
+
+    def __init__(self, slot):
+        self.slot = slot
+        self.alive = False
+        self.spawned = 0
+        self.release = threading.Event()
+
+    def spawn(self):
+        self.spawned += 1
+        self.alive = True
+
+    def wait_ready(self, timeout_s):
+        assert self.release.wait(10.0), "test never released wait_ready"
+        return ("127.0.0.1", 9000 + self.slot)
+
+
+class _StubRouter:
+    def __init__(self):
+        self.replaced = []
+        self.probes = 0
+
+    def replace_endpoint(self, slot, ep):
+        self.replaced.append((slot, ep))
+
+    def probe_once(self):
+        self.probes += 1
+
+
+def test_respawn_claims_slot_then_works_outside_the_lock(monkeypatch):
+    """Regression (repro-lint LOCK001): _respawn/restart_worker used to
+    hold Fabric._lock across spawn + wait_ready + probe — seconds of
+    blocking under the bookkeeping lock, so stats() readers and any
+    concurrent restart froze behind one slot's respawn. The slot is now
+    CLAIMED under the lock (a set entry) and all slow work happens with
+    the lock released; a second actor hitting the same slot backs off
+    instead of queueing."""
+    import repro.serving.fabric as FB
+
+    # The real WorkerEndpoint connects eagerly in __init__; the stub just
+    # records what the router was handed.
+    monkeypatch.setattr(FB, "WorkerEndpoint",
+                        lambda slot, addr: ("ep", slot, addr))
+    fab = Fabric(n_workers=2, supervise=False)
+    w0, w1 = _StubRestartWorker(0), _StubRestartWorker(1)
+    fab.workers = [w0, w1]
+    fab.router = _StubRouter()
+
+    t = threading.Thread(target=fab._respawn, args=(w0,), daemon=True)
+    t.start()
+    deadline = time.time() + 5.0
+    while w0.spawned == 0 and time.time() < deadline:
+        time.sleep(0.001)
+    assert w0.spawned == 1              # parked inside wait_ready now
+
+    # The bookkeeping lock is FREE while slot 0 respawns ...
+    assert fab._lock.acquire(timeout=1.0), \
+        "_respawn holds Fabric._lock across wait_ready"
+    fab._lock.release()
+    # ... the slot itself is claimed, other slots stay claimable ...
+    assert not fab._claim_slot(0)
+    assert fab._claim_slot(1)
+    fab._release_slot(1)
+    # ... a racing respawn of the same slot is a silent no-op ...
+    fab._respawn(w0)
+    assert w0.spawned == 1
+    # ... and an explicit restart of the same slot refuses loudly.
+    with pytest.raises(RuntimeError, match="already restarting"):
+        fab.restart_worker(0)
+
+    w0.release.set()
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    assert fab.respawns == 1
+    assert fab.router.replaced == [(0, ("ep", 0, ("127.0.0.1", 9000)))]
+    assert fab.router.probes == 1
+    assert fab._claim_slot(0)           # slot released after the respawn
+    fab._release_slot(0)
+
+
 # ------------------------------------------------------------- telemetry --
 
 def test_trace_crosses_process_boundary(fabric):

@@ -243,3 +243,43 @@ def test_warmed_tracker_switches_from_default_to_adaptive():
     # Warm: the delay is now the observed p95 (clamped), not the default.
     assert ht.hedge_delay_s() < 0.2
     assert ht.hedge_delay_s() >= 0.001
+
+
+def test_fresh_requests_route_around_busy_endpoint():
+    """Regression (repro-lint LOCK001 follow-up): a losing attempt holds
+    its endpoint lock while it drains the discarded reply — by design, the
+    lock is the drain barrier. Plain round-robin then assigned every other
+    request to the draining endpoint and made it QUEUE behind the drain: a
+    tail-latency cliff for requests that had a free replica available.
+    _pick_endpoints now skews away from endpoints whose lock is held."""
+    import queue as queue_mod
+
+    slow = _StubTransport("slow", 1, delay_s=0.6)
+    fast = _StubTransport("fast", 2)
+    # Infinite hedge delay isolates the routing decision: nothing hedges,
+    # so a request parked on the busy endpoint would wait the full 0.6s.
+    ht = HedgedTransport([slow, fast], hedge_s=float("inf"))
+
+    # Occupy endpoint 0 the way a loser drain does: an attempt in flight
+    # holding the endpoint lock.
+    drain = threading.Thread(
+        target=ht._attempt,
+        args=(0, "get_score_batch", ([("q", "a")],), queue_mod.Queue()),
+        daemon=True)
+    drain.start()
+    deadline = time.time() + 2.0
+    while not ht._locks[0].locked() and time.time() < deadline:
+        time.sleep(0.001)
+    assert ht._locks[0].locked()
+
+    # Every request issued while 0 drains must land on the free endpoint
+    # and return fast — the old rotation parked half of them behind the
+    # 0.6s drain.
+    t0 = time.perf_counter()
+    outs = [ht.get_score_batch([("q", "a")]) for _ in range(4)]
+    dt = time.perf_counter() - t0
+    assert all(out == [2.0] for out in outs)
+    assert dt < 0.4, f"queued behind the draining endpoint ({dt:.3f}s)"
+    assert fast.calls == 4 and slow.calls == 0
+    drain.join(timeout=2.0)
+    assert not drain.is_alive()

@@ -63,6 +63,45 @@ def test_microbatcher_concurrent_clients(world):
         assert abs(got - float(want)) < 1e-5
 
 
+def test_microbatcher_enqueue_survives_already_done_future():
+    """Regression (repro-lint LOCK003): _enqueue used to register the
+    settle callback while still holding the batcher lock. A Future that is
+    already done runs its callbacks synchronously on the registering
+    thread, and _settle re-takes the same non-reentrant lock — so whenever
+    the batch loop resolved the future before registration, enqueue
+    self-deadlocked. The callback is now registered after the lock is
+    released; this drives that exact interleaving deterministically by
+    resolving the future first."""
+    import queue as queue_mod
+
+    from repro.serving.batcher import _Item
+
+    # Bare instance: just the fields the _enqueue/_settle protocol touches,
+    # no batch-loop thread racing the test.
+    mb = MicroBatcher.__new__(MicroBatcher)
+    mb._q = queue_mod.Queue()
+    mb._lock = threading.Lock()
+    mb._outstanding_rows = 0
+    mb._running = True
+
+    item = _Item(np.zeros(3, np.int32), np.zeros(3, np.int32),
+                 np.zeros(4, np.float32), single=True)
+    item.future.set_result(1.0)     # done BEFORE registration: the
+    done = threading.Event()        # callback fires synchronously
+
+    def run():
+        mb._enqueue(item)
+        done.set()
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    assert done.wait(2.0), \
+        "_enqueue deadlocked registering the done-future callback"
+    # _settle ran and balanced the outstanding count back to zero.
+    assert mb._outstanding_rows == 0
+    assert mb._q.get_nowait() is item
+
+
 def test_engine_end_to_end_and_stats(world):
     cfg, params, corpus, tok, scorer = world
     eng = ServingEngine(scorer, tok, corpus.idf, cfg.max_len,

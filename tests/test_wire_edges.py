@@ -323,9 +323,18 @@ def test_truncated_ranking_reply_raises_value_error():
      lambda t, p: wire.decode_request_ex(t, p)),
     (wire.encode_get_score_batch([("q1", "a1"), ("q2", "a2")]),
      lambda t, p: wire.decode_request_ex(t, p)),
+    (wire.encode_rank("who wrote hamlet", 0.5),
+     lambda t, p: wire.decode_rank_request(t, p)),
     (wire.encode_rank_batch(["one", "two", "three"], 0.1),
      lambda t, p: wire.decode_rank_request(t, p)),
     (wire.encode_reply([1.0, 2.0, 3.0]),
+     lambda t, p: wire.decode_reply(t, p)),
+    # Control-plane reply frames carry a reason string; every proper
+    # prefix must still fail as a typed ValueError, never ShedError /
+    # RuntimeError (those fire only on a complete frame).
+    (wire.encode_shed("draining"),
+     lambda t, p: wire.decode_reply(t, p)),
+    (wire.encode_error("boom"),
      lambda t, p: wire.decode_reply(t, p)),
 ])
 def test_fuzz_truncation_only_raises_value_error(frame, decoder):
@@ -392,6 +401,8 @@ def test_reply_health_hostile_count_raises():
 
 @pytest.mark.parametrize("frame,decoder", [
     (wire.encode_health(0.5),
+     lambda t, p: wire.decode_control_request(t, p)),
+    (wire.encode_drain(0.25),
      lambda t, p: wire.decode_control_request(t, p)),
     (wire.encode_reply_health({"queue_depth": 2.0, "inflight": 1.0}),
      lambda t, p: wire.decode_reply_health(t, p)),
