@@ -1,0 +1,145 @@
+"""Rollout benchmark: hot-swap latency and its tail-latency cost.
+
+Three questions a rollout operator asks, one row each:
+
+  rollout_swap_idle        — how long does a full 2-replica pool hot-swap
+                             take with no traffic (registry load + scorer
+                             rebuild + replica-by-replica drain)?
+  rollout_steady_p99       — baseline request p99 under closed-loop load,
+                             no swaps.
+  rollout_swap_churn_p99   — the same load while the pool hot-swaps every
+                             ~150ms, alternating versions. The gap to
+                             steady p99 is the price of a swap; the failed
+                             count must be 0 (the zero-loss protocol).
+
+  PYTHONPATH=src python -m benchmarks.rollout_bench
+  PYTHONPATH=src python -m benchmarks.run --table rollout --json out.json
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import build_world
+from repro.core.registry import ModelRegistry
+from repro.serving.cluster import ReplicaPool
+
+N_CLIENTS = 3
+PAIRS_PER_REQ = 8
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+
+def _drive(pool, pairs, duration_s: float):
+    """Closed-loop load from N_CLIENTS threads; returns (latencies_s,
+    failures)."""
+    latencies: List[float] = []
+    failures: List[str] = []
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def client():
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                pool.get_scores(pairs)
+            except Exception as e:  # noqa: BLE001 — counted, benchmark
+                with lock:
+                    failures.append(repr(e))
+                continue
+            with lock:
+                latencies.append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=client) for _ in range(N_CLIENTS)]
+    for t in threads:
+        t.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join()
+    return latencies, failures
+
+
+def run(world=None, backend: str = "numpy",
+        duration_s: float = 1.2) -> List[Dict]:
+    if world is None:
+        world = build_world()
+    cfg, params, corpus, tok, index, _ = world
+    pairs = [(corpus.questions[i % len(corpus.questions)],
+              corpus.documents[i % len(corpus.documents)][0])
+             for i in range(PAIRS_PER_REQ)]
+
+    with tempfile.TemporaryDirectory() as reg_dir:
+        registry = ModelRegistry(reg_dir)
+        va = registry.publish(params, model=cfg.name).version_id
+        vb = registry.publish(jax.tree.map(lambda x: x * 1.5, params),
+                              model=cfg.name).version_id
+
+        pool = ReplicaPool.build(backend, params, cfg, tok, corpus.idf,
+                                 n_replicas=2, buckets=(1, 8, 64))
+        try:
+            pool.get_scores(pairs)                     # warm the scorers
+            rows: List[Dict] = []
+
+            # -- idle swap latency (alternate so every swap does real work)
+            swap_times = []
+            for target in (vb, va, vb, va):
+                t0 = time.perf_counter()
+                pool.swap_version(target, registry)
+                swap_times.append(time.perf_counter() - t0)
+            rows.append({
+                "name": f"rollout_swap_idle_{backend}",
+                "us_per_call": 1e6 * float(np.mean(swap_times)),
+                "derived": f"swaps={len(swap_times)} replicas=2",
+            })
+
+            # -- steady-state baseline
+            lat, failed = _drive(pool, pairs, duration_s)
+            rows.append({
+                "name": f"rollout_steady_p99_{backend}",
+                "us_per_call": 1e6 * _percentile(lat, 0.99),
+                "derived": (f"qps={len(lat) / duration_s:.1f} "
+                            f"failed={len(failed)}"),
+            })
+
+            # -- the same load under swap churn
+            churn_stop = threading.Event()
+            swaps = [0]
+
+            def churn():
+                flip = [va, vb]
+                while not churn_stop.is_set():
+                    time.sleep(0.15)
+                    pool.swap_version(flip[swaps[0] % 2], registry)
+                    swaps[0] += 1
+
+            churner = threading.Thread(target=churn)
+            churner.start()
+            lat_c, failed_c = _drive(pool, pairs, duration_s)
+            churn_stop.set()
+            churner.join()
+            rows.append({
+                "name": f"rollout_swap_churn_p99_{backend}",
+                "us_per_call": 1e6 * _percentile(lat_c, 0.99),
+                "derived": (f"qps={len(lat_c) / duration_s:.1f} "
+                            f"swaps={swaps[0]} failed={len(failed_c)}"),
+            })
+            return rows
+        finally:
+            pool.stop()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

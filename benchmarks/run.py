@@ -37,7 +37,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--table", default="all",
                     choices=["all", "1", "2", "e2e", "pipeline_plans",
-                             "loadgen", "fabric", "roofline", "trace"])
+                             "loadgen", "fabric", "roofline", "trace",
+                             "rollout"])
     ap.add_argument("--processes", default="1,2,4", metavar="N,N,...",
                     help="worker-process counts for --table fabric")
     ap.add_argument("--naive", action="store_true",
@@ -50,14 +51,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (e2e_pipeline, loadgen, pipeline_plans,
-                            roofline_table, table1_feedforward,
-                            table2_service, trace_table)
+                            rollout_bench, roofline_table,
+                            table1_feedforward, table2_service, trace_table)
     from benchmarks.common import build_world
 
     rows = []
     world = None
     if args.table in ("all", "1", "2", "e2e", "pipeline_plans", "loadgen",
-                      "trace"):
+                      "trace", "rollout"):
         world = build_world()
     if args.table in ("all", "1"):
         rows += table1_feedforward.run(batch=1, world=world, naive=args.naive)
@@ -79,6 +80,10 @@ def main() -> None:
             tuple(int(x) for x in args.processes.split(",")))
     if args.table in ("all", "roofline"):
         rows += roofline_table.run()
+    if args.table == "rollout":
+        # Not in "all": it drives a live 2-replica pool with closed-loop
+        # client threads for a couple of seconds per condition.
+        rows += rollout_bench.run(world=world)
     if args.table == "trace":
         # Not in "all": it stands up its own served pipeline and toggles
         # the process-wide tracer for the overhead measurement.

@@ -3,8 +3,10 @@
 # plus the fabric process-scaling sweep and drop the machine-readable rows
 # at the repo root, so the perf trajectory accumulates one JSON per PR.
 #
-#   scripts/bench_snapshot.sh            # writes BENCH_pr8.json
-#   scripts/bench_snapshot.sh pr9        # writes BENCH_pr9.json
+#   scripts/bench_snapshot.sh            # writes BENCH_pr<N>.json, N from
+#                                        # `git rev-list --count HEAD`
+#   scripts/bench_snapshot.sh pr9        # explicit tag (positional)
+#   scripts/bench_snapshot.sh --tag pr9  # explicit tag (flag form)
 #   PROCESSES=1,2 scripts/bench_snapshot.sh   # smaller fabric sweep
 #
 # The snapshot covers the four execution plans (local / batched / remote /
@@ -16,7 +18,17 @@
 # newest snapshots as a non-fatal advisory after a green suite).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-tag="${1:-pr8}"
+tag=""
+if [[ "${1:-}" == "--tag" ]]; then
+    tag="${2:?--tag needs a value}"
+elif [[ -n "${1:-}" ]]; then
+    tag="$1"
+fi
+if [[ -z "$tag" ]]; then
+    # Default: commit count, so snapshots sort with PR history and a stale
+    # hard-coded tag can't silently overwrite an older PR's snapshot.
+    tag="pr$(git rev-list --count HEAD 2>/dev/null || echo 0)"
+fi
 out="BENCH_${tag}.json"
 procs="${PROCESSES:-1,2,4}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

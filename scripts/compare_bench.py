@@ -6,8 +6,11 @@
 
 Rows are matched by ``name``; for each match the us_per_call delta is
 printed, and any row that got slower by more than ``--threshold``
-(default 20%) is flagged as a REGRESSION. Rows present in only one file
-are listed but never flagged (new benchmarks are not regressions).
+(default 20%) is flagged as a REGRESSION. Disjoint row sets are expected
+between PRs (tables get added, sweeps resized): rows present in only one
+file are listed as new/removed and summarized, never flagged, and never
+skew the matched-row deltas. Rows without a ``us_per_call`` (derived or
+malformed) are reported, not crashed on.
 
 Exit code: 0 if clean, 1 if any regression was flagged — callers decide
 whether that is fatal (``scripts/tier1.sh`` runs it as a non-fatal
@@ -20,7 +23,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 
 def load_rows(path: str) -> Dict[str, dict]:
@@ -31,24 +34,40 @@ def load_rows(path: str) -> Dict[str, dict]:
     return {r["name"]: r for r in rows if "name" in r}
 
 
+def _us(row: Optional[dict]) -> Optional[float]:
+    """A row's us_per_call as a float, or None when absent/non-numeric —
+    snapshot lists can mix timing rows with derived rows."""
+    if row is None:
+        return None
+    value = row.get("us_per_call")
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return None
+
+
 def compare(old: Dict[str, dict], new: Dict[str, dict],
-            threshold: float) -> List[str]:
-    """Return the list of regression lines (empty = clean); prints the
-    full comparison table as a side effect."""
+            threshold: float) -> Tuple[List[str], List[str], List[str]]:
+    """Return (regression lines, added names, removed names); prints the
+    full comparison table as a side effect. Only rows present in BOTH
+    snapshots with usable timings can regress."""
     regressions: List[str] = []
+    added = sorted(set(new) - set(old))
+    removed = sorted(set(old) - set(new))
     names = sorted(set(old) | set(new))
     width = max((len(n) for n in names), default=4)
     print(f"{'name':<{width}}  {'old_us':>10}  {'new_us':>10}  {'delta':>8}")
     for name in names:
         o, n = old.get(name), new.get(name)
+        old_us, new_us = _us(o), _us(n)
         if o is None or n is None:
             tag = "new" if o is None else "removed"
-            old_s = "-" if o is None else f"{o['us_per_call']:.1f}"
-            new_s = "-" if n is None else f"{n['us_per_call']:.1f}"
+            old_s = "-" if old_us is None else f"{old_us:.1f}"
+            new_s = "-" if new_us is None else f"{new_us:.1f}"
             print(f"{name:<{width}}  {old_s:>10}  {new_s:>10}  {tag:>8}")
             continue
-        old_us, new_us = o["us_per_call"], n["us_per_call"]
-        if old_us <= 0:
+        if old_us is None or new_us is None or old_us <= 0:
+            print(f"{name:<{width}}  {'?':>10}  {'?':>10}  {'no-us':>8}")
             continue
         delta = new_us / old_us - 1.0
         flag = ""
@@ -59,7 +78,7 @@ def compare(old: Dict[str, dict], new: Dict[str, dict],
                 f"({100 * delta:+.1f}%)")
         print(f"{name:<{width}}  {old_us:>10.1f}  {new_us:>10.1f}  "
               f"{100 * delta:>+7.1f}%{flag}")
-    return regressions
+    return regressions, added, removed
 
 
 def main() -> int:
@@ -80,7 +99,14 @@ def main() -> int:
         cores = any_row.get("host_cores", "?")
         print(f"# {label}: {len(rows)} rows  sha={sha}  utc={utc}  "
               f"cores={cores}")
-    regressions = compare(old, new, args.threshold)
+    regressions, added, removed = compare(old, new, args.threshold)
+    if added or removed:
+        print(f"\nrow set changed: {len(added)} added, "
+              f"{len(removed)} removed (informational, never flagged)")
+        for name in added:
+            print(f"  + {name}")
+        for name in removed:
+            print(f"  - {name}")
     if regressions:
         print(f"\n{len(regressions)} regression(s) over "
               f"{100 * args.threshold:.0f}%:")

@@ -4,7 +4,11 @@
 # through to pytest, e.g. scripts/tier1.sh -k ops_plan.
 # The fast set includes the 2-worker-process fabric smoke
 # (tests/test_fabric.py::test_fabric_smoke — spawn, health-route, rank,
-# teardown); the heavier drain/respawn fabric tests carry the slow marker.
+# teardown) and the hot-swap smoke (tests/test_rollout.py::
+# test_pool_hot_swap_zero_loss_under_load — 2-replica pool swaps model
+# versions under threaded load with zero failed requests); the heavier
+# drain/respawn fabric tests and the swap-under-Poisson / shadow-
+# divergence soaks carry the slow marker.
 # For the per-PR perf snapshot (pipeline_plans table + fabric process
 # sweep -> BENCH_<pr>.json at the repo root), run scripts/bench_snapshot.sh
 # after the suite is green.

@@ -157,15 +157,42 @@ class PlanContext:
     #: chunks at worst shed retriably under load (and the plan's Client
     #: carries a shed-retry budget).
     remote_chunk: int = 256
+    #: Model registry binding (``core.registry.ModelRegistry``). With a
+    #: ``model_version`` set, construction resolves the version and loads
+    #: its weights INSTEAD of serving ``params`` as passed — the version id
+    #: becomes the context's model identity (declarative model binding;
+    #: the PyTerrier idea applied to weights). ``params`` then only serves
+    #: as the pytree template for restore (optional: without one the tree
+    #: is rebuilt from the stored tensor names).
+    registry: Any = None
+    model_version: Optional[str] = None
 
     def __post_init__(self):
         if self.cache is None:
             self.cache = FeaturizationCache(self.tokenizer, self.idf,
                                             self.max_len,
                                             self.cache_capacity)
+        if self.model_version is not None:
+            if self.registry is None:
+                raise PlanError(f"model_version "
+                                f"{self.model_version!r} is bound but no "
+                                f"registry is")
+            self.model_version = self.registry.resolve(self.model_version)
+            self.params = self.registry.load_params(self.model_version,
+                                                    template=self.params)
         self._scorers: Dict[Tuple, Any] = {}
         self._transports: Dict[Any, Any] = {}
         self._owned_clients: List[Any] = []
+
+    def bind_version(self, version: str) -> "PlanContext":
+        """A NEW context serving ``version`` ("latest", an id, or a unique
+        prefix): same corpus/cache/remote bindings, freshly resolved params
+        and an empty scorer memo — the hot-swap building block
+        (``serving.engine.PipelineEngine.swap_version`` plans against the
+        rebound context, then swaps plans atomically)."""
+        if self.registry is None:
+            raise PlanError("bind_version needs ctx.registry bound")
+        return dataclasses.replace(self, model_version=version)
 
     @classmethod
     def from_world(cls, cfg, params, corpus, tokenizer, index,

@@ -136,6 +136,34 @@ class QuestionAnsweringHandler:
         return self.scorer(q_tok, a_tok, feats)
 
 
+def _rollout_frame(handler, state: Optional[ServerState], version: Optional[str]
+                   ) -> bytes:
+    """Answer the rollout control plane (MSG_VERSION / MSG_SWAP).
+
+    A version probe (``version is None``) reports whatever the handler is
+    serving. A swap asks the handler to hot-swap to ``version``; success
+    clears any graceful-drain state — the v4 drain → reload → REJOIN cycle
+    needs no restart — while failure leaves both the old version and the
+    drain flag untouched.
+    """
+    if version is None:
+        current = getattr(handler, "model_version", None)
+        return wire.encode_reply_version(str(current or "unversioned"))
+    swap = getattr(handler, "swap_version", None)
+    if swap is None:
+        return wire.encode_error(
+            "handler has no swap_version (serve a registry-bound "
+            "PipelineEngine to enable hot-swap)")
+    try:
+        active = swap(version)
+    except Exception as e:  # noqa: BLE001 — reported, old version serves on
+        return wire.encode_error(f"swap to {version!r} failed: {e}")
+    if state is not None:
+        state.draining.clear()
+    telemetry.get_registry().inc("server_swaps")
+    return wire.encode_reply_version(str(active), "swapped")
+
+
 def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                       admission=None, state: Optional[ServerState] = None
                       ) -> None:
@@ -154,7 +182,9 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
     v4 control frames (MSG_HEALTH / MSG_DRAIN) are answered before — and
     during — drain: health probes never queue behind admission, and a
     draining server keeps reporting its ``inflight`` count so the drainer
-    can poll it to zero.
+    can poll it to zero. The rollout frames (MSG_VERSION / MSG_SWAP) share
+    that property: a DRAINED worker still answers them, so the hot-swap
+    cycle (drain -> swap -> rejoin) runs over one control connection.
     """
     conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     conn.settimeout(CONN_TIMEOUT_S)
@@ -183,6 +213,22 @@ def _serve_connection(conn: socket.socket, handler, stop: threading.Event,
                         state.draining.set()
                     frame = wire.encode_reply_health(
                         _health_snapshot(handler, admission, state))
+            try:
+                conn.sendall(frame)
+            except OSError:
+                break
+            continue
+        if t in (wire.MSG_VERSION, wire.MSG_SWAP):
+            try:
+                if t == wire.MSG_SWAP:
+                    version, _ = wire.decode_swap_request(t, payload)
+                else:
+                    wire.decode_control_request(t, payload)
+                    version = None
+            except Exception as e:  # noqa: BLE001 — malformed request
+                frame = wire.encode_error(str(e))
+            else:
+                frame = _rollout_frame(handler, state, version)
             try:
                 conn.sendall(frame)
             except OSError:
@@ -659,6 +705,21 @@ class Client:
         snapshot — poll ``health()`` until ``inflight`` hits zero."""
         return self._rpc_with_retry(lambda b: wire.encode_drain(b), None,
                                     wire.decode_reply_health)
+
+    def version(self, deadline_s: Optional[float] = None) -> Tuple[str, str]:
+        """Which registry version is the server serving? Returns
+        (version_id or "unversioned", status)."""
+        return self._rpc_with_retry(lambda b: wire.encode_version(b),
+                                    deadline_s, wire.decode_reply_version)
+
+    def swap(self, version: str, deadline_s: Optional[float] = None
+             ) -> Tuple[str, str]:
+        """Hot-swap the server to ``version`` ("latest", a registry id, or
+        a unique prefix). Blocks until the server has reloaded the weights
+        and rebuilt its plan; returns (active_version, "swapped"). A failed
+        swap raises ``RuntimeError`` and leaves the old version serving."""
+        return self._rpc_with_retry(lambda b: wire.encode_swap(version, b),
+                                    deadline_s, wire.decode_reply_version)
 
     def stats(self, deadline_s: Optional[float] = None
               ) -> Tuple[Dict[str, float], List[wire.WireSpan]]:

@@ -65,6 +65,21 @@ Version history:
        trace field sits behind FLAG_TRACE which old encoders never set,
        and old decoders reject unknown versions with a typed error as
        before.
+  v5 + rollout — the live model-rollout control plane (see
+       serving.rollout). The header byte stays 5: these are new frame
+       TYPES, not a new header layout, so every v1-v5 frame keeps
+       decoding bit-for-bit and an old server answers the new types with
+       its usual MSG_ERROR for unknown messages:
+         MSG_VERSION       (header only)            -> MSG_REPLY_VERSION
+         MSG_SWAP          header | version:str     -> MSG_REPLY_VERSION
+         MSG_REPLY_VERSION version:str | status:str
+       MSG_VERSION asks which registry version a worker is serving;
+       MSG_SWAP asks it to hot-swap to ``version`` ("latest" or a
+       registry id) — the server reloads the weights, atomically replaces
+       its plan/scorers, clears any graceful-drain state (the drained
+       worker REJOINS on the new version), and acks with the now-active
+       version. A failed swap answers MSG_ERROR and leaves the old
+       version serving.
 
 Malformed input: every decoder raises ``ValueError`` with byte-offset
 context on truncated or hostile payloads — never a bare ``IndexError`` or
@@ -88,11 +103,14 @@ MSG_RANK_BATCH = 4
 MSG_HEALTH = 5
 MSG_DRAIN = 6
 MSG_STATS = 7
+MSG_VERSION = 8
+MSG_SWAP = 9
 MSG_REPLY_SCORE = 101
 MSG_REPLY_SCORES = 102
 MSG_REPLY_RANKING = 103
 MSG_REPLY_HEALTH = 104
 MSG_REPLY_STATS = 105
+MSG_REPLY_VERSION = 106
 MSG_SHED = 254
 MSG_ERROR = 255
 
@@ -255,13 +273,61 @@ def encode_stats(deadline_s: Optional[float] = None) -> bytes:
     return struct.pack("<IB", len(payload), MSG_STATS) + payload
 
 
+def encode_version(deadline_s: Optional[float] = None) -> bytes:
+    """Model-version probe: header-only request, answered with
+    MSG_REPLY_VERSION (the registry version id the server is serving)."""
+    payload = _request_header(deadline_s)
+    return struct.pack("<IB", len(payload), MSG_VERSION) + payload
+
+
+def encode_swap(version: str, deadline_s: Optional[float] = None) -> bytes:
+    """Hot-swap control frame: ask the server to reload ``version`` (a
+    registry id, a unique prefix, or "latest") and rejoin serving on it.
+    Success answers MSG_REPLY_VERSION with the now-active version; failure
+    answers MSG_ERROR and leaves the previous version serving."""
+    payload = _request_header(deadline_s) + _pack_str(version)
+    return struct.pack("<IB", len(payload), MSG_SWAP) + payload
+
+
 def decode_control_request(msg_type: int, payload: bytes) -> Optional[float]:
-    """Decode a control frame (MSG_HEALTH / MSG_DRAIN / MSG_STATS); returns
-    the deadline_s or None (control frames carry no body past the
-    header)."""
-    if msg_type not in (MSG_HEALTH, MSG_DRAIN, MSG_STATS):
+    """Decode a bodyless control frame (MSG_HEALTH / MSG_DRAIN / MSG_STATS /
+    MSG_VERSION); returns the deadline_s or None."""
+    if msg_type not in (MSG_HEALTH, MSG_DRAIN, MSG_STATS, MSG_VERSION):
         raise ValueError(f"unknown control msg type {msg_type}")
     return _decode_header(memoryview(payload))[0]
+
+
+def decode_swap_request(msg_type: int, payload: bytes
+                        ) -> Tuple[str, Optional[float]]:
+    """Decode a MSG_SWAP frame into (target version, deadline_s or None)."""
+    if msg_type != MSG_SWAP:
+        raise ValueError(f"unknown swap msg type {msg_type}")
+    buf = memoryview(payload)
+    deadline_s, off = _decode_header(buf)
+    version, _ = _unpack_str(buf, off)
+    return version, deadline_s
+
+
+def encode_reply_version(version: str, status: str = "active") -> bytes:
+    """Version reply: version:str | status:str ("active" for a probe,
+    "swapped" after a successful MSG_SWAP)."""
+    payload = _pack_str(version) + _pack_str(status)
+    return struct.pack("<IB", len(payload), MSG_REPLY_VERSION) + payload
+
+
+def decode_reply_version(msg_type: int, payload: bytes) -> Tuple[str, str]:
+    """Decode a MSG_REPLY_VERSION frame into (version, status); shed/error
+    frames raise exactly like ``decode_reply``."""
+    if msg_type == MSG_SHED:
+        raise ShedError(f"request shed: {_reply_text(payload)}")
+    if msg_type == MSG_ERROR:
+        raise RuntimeError(f"server error: {_reply_text(payload)}")
+    if msg_type != MSG_REPLY_VERSION:
+        raise ValueError(f"unknown version reply type {msg_type}")
+    buf = memoryview(payload)
+    version, off = _unpack_str(buf, 0)
+    status, _ = _unpack_str(buf, off)
+    return version, status
 
 
 def encode_reply_health(stats: Dict[str, float]) -> bytes:

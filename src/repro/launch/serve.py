@@ -18,6 +18,16 @@
   # ask a running server to drain gracefully (finish in-flight, shed new)
   PYTHONPATH=src python -m repro.launch.serve --drain 127.0.0.1:9090
 
+  # version-bound serving from a model registry (core.registry), with
+  # live hot-swap / shadow / A-B (serving.rollout; see docs/rollout.md):
+  PYTHONPATH=src python -m repro.launch.serve --serve-pipeline \
+      --registry /tmp/registry --model-version latest --port 9090
+  PYTHONPATH=src python -m repro.launch.serve --swap v-0123abcd --port 9090
+  PYTHONPATH=src python -m repro.launch.serve --serve-pipeline \
+      --registry /tmp/registry --shadow v-0123abcd --shadow-fraction 0.2
+  PYTHONPATH=src python -m repro.launch.serve --serve-pipeline \
+      --registry /tmp/registry --ab v-0123abcd:25
+
   # serve the WHOLE multi-stage pipeline behind one RPC (wire v3
   # MSG_RANK / MSG_RANK_BATCH; drive with Client.rank / rank_batch or a
   # plan(pipeline, "remote_pipeline", ctx) on the client side)
@@ -54,13 +64,53 @@ def canonical_pipeline(backend: str):
             >> ops.Rerank(backend, k=3))
 
 
+def _wrap_rollout(args, engine, ctx, target: str):
+    """Wrap the primary engine in shadow / A-B layers (serving.rollout)
+    when requested. Candidate arms are full ``PipelineEngine``s planned
+    against a version-rebound context, so they never share compiled
+    scorers with the primary."""
+    shadow = getattr(args, "shadow", None)
+    ab = getattr(args, "ab", None)
+    if not shadow and not ab:
+        return engine
+    if target == "remote":
+        raise SystemExit("--shadow/--ab need an in-process candidate plan; "
+                         "use --plan-target local|batched (the remote "
+                         "target's ReplicaPool would be shared by both "
+                         "versions)")
+    from repro.serving.engine import PipelineEngine
+    from repro.serving.rollout import ABEngine, ShadowEngine
+    if ab:
+        version, _, pct = ab.partition(":")
+        arm_b = PipelineEngine(canonical_pipeline(args.backend),
+                               ctx.bind_version(version), target=target)
+        engine = ABEngine(engine, arm_b,
+                          split_pct=float(pct) if pct else 50.0)
+    if shadow:
+        candidate = PipelineEngine(canonical_pipeline(args.backend),
+                                   ctx.bind_version(shadow), target=target)
+        engine = ShadowEngine(engine, candidate,
+                              fraction=getattr(args, "shadow_fraction",
+                                               0.2))
+    return engine
+
+
 def build_server(args, cfg, params, corpus, tok, index=None, ctx=None):
     """Build (server, pool-or-None) from parsed CLI args."""
     if ctx is None:
+        registry = None
+        if getattr(args, "registry", None):
+            from repro.core.registry import ModelRegistry
+            registry = ModelRegistry(args.registry)
+        model_version = getattr(args, "model_version", None)
+        if model_version and registry is None:
+            raise SystemExit("--model-version needs --registry DIR")
         ctx = PlanContext.from_world(cfg, params, corpus, tok, index=index,
                                      buckets=(1, 8, 64, 256),
                                      hedge_ms=getattr(args, "hedge_ms",
-                                                      None))
+                                                      None),
+                                     registry=registry,
+                                     model_version=model_version)
     if getattr(args, "serve_pipeline", False):
         # Whole-pipeline ranking service (wire v3): the handler lowers the
         # canonical pipeline server-side and answers MSG_RANK_BATCH with
@@ -75,13 +125,17 @@ def build_server(args, cfg, params, corpus, tok, index=None, ctx=None):
             # reports telemetry for, the full admission -> batcher ->
             # scorer path (queue-wait vs compute histograms per worker).
             import dataclasses as _dc
-            pool = ReplicaPool.build(args.backend, params, cfg, tok,
+            # ctx.params, not the raw build_world params: a --model-version
+            # bind already resolved registry weights into the context.
+            pool = ReplicaPool.build(args.backend, ctx.params, cfg, tok,
                                      corpus.idf, n_replicas=args.replicas,
                                      buckets=ctx.buckets or (1, 8, 64, 256),
                                      policy=args.policy)
+            pool.model_version = getattr(ctx, "model_version", None)
             ctx = _dc.replace(ctx, remote=pool)
         engine = PipelineEngine(canonical_pipeline(args.backend), ctx,
                                 target=target)
+        engine = _wrap_rollout(args, engine, ctx, target)
         if args.server == "simple":
             return SV.SimpleServer(engine, host=args.host,
                                    port=args.port), pool
@@ -181,7 +235,41 @@ def main():
                     help="send MSG_DRAIN to a running server (finish "
                          "in-flight, shed new work), print its health "
                          "snapshot, and exit")
+    ap.add_argument("--registry", default=None, metavar="DIR",
+                    help="model registry directory (core.registry): "
+                         "enables --model-version binding and live "
+                         "MSG_SWAP hot-swaps on this server")
+    ap.add_argument("--model-version", default=None, metavar="VID",
+                    help="serve this registry version ('latest', a full "
+                         "id, or a unique prefix) instead of the "
+                         "freshly-trained params; needs --registry")
+    ap.add_argument("--swap", default=None, metavar="VERSION",
+                    help="client command: hot-swap a RUNNING server "
+                         "(--host/--port) to this registry version over "
+                         "MSG_SWAP, print the reply, and exit")
+    ap.add_argument("--shadow", default=None, metavar="VERSION",
+                    help="mirror a sampled fraction of ranking traffic "
+                         "to this registry version and record divergence "
+                         "metrics; candidate rankings are discarded "
+                         "(needs --serve-pipeline + --registry)")
+    ap.add_argument("--shadow-fraction", type=float, default=0.2,
+                    help="fraction of distinct queries mirrored by "
+                         "--shadow (deterministic hash sampling)")
+    ap.add_argument("--ab", default=None, metavar="VERSION[:PCT]",
+                    help="A/B split: route PCT%% (default 50) of the "
+                         "query hash space to this registry version; "
+                         "per-arm metrics carry model_version labels "
+                         "(needs --serve-pipeline + --registry)")
     args = ap.parse_args()
+
+    if args.swap:
+        if args.port == 0:
+            raise SystemExit("--swap is a client command: point it at a "
+                             "running server with --host/--port")
+        with SV.Client((args.host, args.port)) as client:
+            vid, status = client.swap(args.swap)
+        print(f"swap acknowledged: version={vid} status={status}")
+        return
 
     if args.drain:
         host, _, port = args.drain.rpartition(":")
@@ -194,8 +282,13 @@ def main():
         # The supervisor builds no world of its own — each worker process
         # trains/compiles independently (that is the point of the fabric).
         from repro.serving.fabric import Fabric
-        extra = (("--plan-target", args.plan_target)
-                 if args.plan_target != "batched" else ())
+        extra = []
+        if args.plan_target != "batched":
+            extra += ["--plan-target", args.plan_target]
+        if args.registry:
+            extra += ["--registry", args.registry]
+        if args.model_version:
+            extra += ["--model-version", args.model_version]
         with Fabric(n_workers=args.fabric, backend=args.backend,
                     train_steps=args.train_steps, server="threadpool",
                     worker_threads=args.workers,

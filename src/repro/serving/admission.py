@@ -28,6 +28,16 @@ effective_parallelism``. Modelling it serially overestimates the wait by
 comfortably meet their deadline — servers wire the hint from the handler
 (``ReplicaPool.effective_parallelism``) next to the service-time source.
 
+The fallback EWMA is kept PER ROW-COUNT BUCKET (``SERVICE_BUCKETS``
+edges), not as one global average: per-row cost falls steeply with batch
+size (fixed dispatch overhead amortizes across a 64-row batch), so under
+mixed traffic a stream of cheap batch-64 rows would deflate a single
+EWMA and make the controller admit batch-1 requests whose real per-row
+cost is an order of magnitude higher — then miss their deadlines anyway.
+The wait estimate prices a request at ITS OWN bucket's rate (the backlog
+is approximated at the same rate; a scorer-side source, when installed,
+still wins over every bucket).
+
 ``try_admit`` returns ``None`` and takes an outstanding-rows reservation on
 admission, or the shed reason string; every admitted request must be paired
 with exactly one ``release`` (use try/finally) which also feeds the service
@@ -55,6 +65,20 @@ SHED_TOO_LARGE = "too_large"
 #: answer).
 SHED_DRAINING = "draining"
 
+#: Row-count bucket edges for the per-bucket service-time EWMAs: a request
+#: with n rows lands in the first bucket with n <= edge (inf = overflow).
+#: Edges mirror the scorer bucket ladder so "batch-1" and "batch-64"
+#: traffic — whose per-row costs differ by the amortized dispatch
+#: overhead — never share an estimate.
+SERVICE_BUCKETS = (1.0, 8.0, 64.0, float("inf"))
+
+
+def _bucket_of(n_rows: int) -> float:
+    for edge in SERVICE_BUCKETS:
+        if n_rows <= edge:
+            return edge
+    return SERVICE_BUCKETS[-1]
+
 
 class AdmissionController:
     def __init__(self, max_queue_rows: int = 1024,
@@ -66,6 +90,9 @@ class AdmissionController:
         self.max_queue_rows = max_queue_rows
         self._alpha = ewma_alpha
         self._row_service_s = init_row_service_s
+        #: Per-bucket EWMAs, populated lazily from releases; a bucket with
+        #: no observations falls back to the global EWMA.
+        self._bucket_service_s: Dict[float, float] = {}
         self._service_source = service_time_source
         self._parallelism = max(int(effective_parallelism), 1)
         self._outstanding_rows = 0
@@ -91,15 +118,22 @@ class AdmissionController:
         with self._lock:
             self._parallelism = max(int(n), 1)
 
-    def _per_row_s(self) -> float:
+    def _per_row_s(self, n_rows: Optional[int] = None) -> float:
         if self._service_source is not None:
             est = self._service_source()
+            if est is not None:
+                return est
+        if n_rows is not None:
+            est = self._bucket_service_s.get(_bucket_of(n_rows))
             if est is not None:
                 return est
         return self._row_service_s
 
     def _estimated_wait_locked(self, n_rows: int) -> float:
-        return ((self._outstanding_rows + n_rows) * self._per_row_s()
+        # Priced at the REQUEST's bucket rate: a batch-1 arrival is judged
+        # by observed batch-1 per-row cost even when the recent traffic
+        # was cheap batch-64 rows (see module docstring).
+        return ((self._outstanding_rows + n_rows) * self._per_row_s(n_rows)
                 / self._parallelism)
 
     def estimated_wait_s(self, n_rows: int) -> float:
@@ -148,6 +182,11 @@ class AdmissionController:
                 per_row = service_s / n_rows
                 self._row_service_s += self._alpha * (per_row
                                                       - self._row_service_s)
+                bucket = _bucket_of(n_rows)
+                prev = self._bucket_service_s.get(bucket)
+                self._bucket_service_s[bucket] = (
+                    per_row if prev is None
+                    else prev + self._alpha * (per_row - prev))
 
     def stats(self) -> Dict[str, float]:
         with self._lock:
@@ -162,4 +201,7 @@ class AdmissionController:
                 "row_service_ms": self._per_row_s() * 1e3,
                 "effective_parallelism": float(self._parallelism),
             })
+            for edge, est in sorted(self._bucket_service_s.items()):
+                label = "inf" if edge == float("inf") else f"{int(edge)}"
+                s[f"row_service_ms_le_{label}"] = est * 1e3
         return s

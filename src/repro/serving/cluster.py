@@ -39,12 +39,18 @@ POLICIES = ("round_robin", "least_outstanding", "p2c")
 
 
 class Replica:
-    """One scorer + its micro-batching worker + counters."""
+    """One scorer + its micro-batching worker + counters.
+
+    ``draining`` marks a replica mid-hot-swap: ``_pick`` skips it so its
+    retiring batcher can run its backlog dry on the OLD model while the
+    rest of the pool absorbs new work (see ``ReplicaPool.swap_version``).
+    """
 
     def __init__(self, scorer, name: str, max_batch: int, max_wait_s: float):
         self.name = name
         self.batcher = MicroBatcher(scorer, max_batch, max_wait_s)
         self.requests = 0
+        self.draining = False
 
     @property
     def outstanding_rows(self) -> int:
@@ -53,6 +59,7 @@ class Replica:
     def stats(self) -> Dict[str, float]:
         s = self.batcher.stats()
         s["requests"] = float(self.requests)
+        s["draining"] = 1.0 if self.draining else 0.0
         return s
 
 
@@ -74,25 +81,45 @@ class ReplicaPool:
         self.policy = policy
         self.features = FeaturizationCache(tokenizer, idf, max_len,
                                            cache_capacity)
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
         self.replicas = [Replica(s, f"replica{i}", max_batch, max_wait_s)
                          for i, s in enumerate(scorers)]
         self.tracker = LatencyTracker()
         self._lock = threading.Lock()
         self._rr = 0
         self._rng = random.Random(seed)
+        #: Registry version the replicas serve, when version-bound (set by
+        #: ``build``/``swap_version``; pools built from raw scorers stay
+        #: None and cannot hot-swap).
+        self.model_version: Optional[str] = None
+        self._build_info = None      # (backend, cfg, buckets) for rebuilds
+        self._params_template = None  # restore template for version loads
+        self._swap_lock = threading.Lock()  # serializes the claim flag only
+        self._swapping = False
 
     @classmethod
     def build(cls, backend: str, params, cfg, tokenizer: HashingTokenizer,
               idf: Dict[str, float], n_replicas: int = 2,
               buckets: Sequence[int] = (1, 8, 64), **kw) -> "ReplicaPool":
-        """Convenience: N fresh scorer instances of one backend."""
+        """Convenience: N fresh scorer instances of one backend. Pools
+        built this way remember how (backend/cfg/buckets), which is what
+        ``swap_version`` needs to rebuild replicas on a new version."""
         from repro.core import backends as BK
         scorers = [BK.make_scorer(backend, params, cfg, buckets=buckets)
                    for _ in range(n_replicas)]
-        return cls(scorers, tokenizer, idf, cfg.max_len, **kw)
+        pool = cls(scorers, tokenizer, idf, cfg.max_len, **kw)
+        pool._build_info = (backend, cfg, tuple(buckets))
+        pool._params_template = params
+        return pool
 
     def _pick(self) -> Replica:
-        reps = self.replicas
+        # Draining replicas (mid-hot-swap) drop out of routing; if EVERY
+        # replica is draining (single-replica pool mid-swap) new work keeps
+        # flowing — it just lands on the replacement batcher and queues.
+        reps = [r for r in self.replicas if not r.draining]
+        if not reps:
+            reps = self.replicas
         if len(reps) == 1:
             chosen = reps[0]
         elif self.policy == "round_robin":
@@ -117,10 +144,24 @@ class ReplicaPool:
 
     def submit(self, pairs: Sequence[Tuple[str, str]],
                deadline_abs: Optional[float] = None):
-        """Route one request's pairs to a replica; returns the future."""
+        """Route one request's pairs to a replica; returns the future.
+
+        A submit can race a hot-swap: ``_pick`` read the replica before its
+        batcher was replaced, and the retiring batcher stopped before the
+        enqueue landed. The stopped-batcher rejection is SYNCHRONOUS (the
+        item never entered its queue — see ``MicroBatcher._enqueue``), so
+        re-routing is lossless; a fresh pick sees the replacement batcher.
+        """
         q_tok, a_tok, feats = self._featurize_batch(pairs)
-        return self._pick().batcher.submit_many(q_tok, a_tok, feats,
-                                                deadline_abs=deadline_abs)
+        for _ in range(3):
+            fut = self._pick().batcher.submit_many(q_tok, a_tok, feats,
+                                                   deadline_abs=deadline_abs)
+            if fut.done() and isinstance(fut.exception(), RuntimeError) \
+                    and "stopped" in str(fut.exception()):
+                telemetry.get_registry().inc("pool_swap_reroutes")
+                continue
+            return fut
+        return fut
 
     def get_scores(self, pairs: Sequence[Tuple[str, str]],
                    deadline_abs: Optional[float] = None) -> np.ndarray:
@@ -138,7 +179,22 @@ class ReplicaPool:
         # queue-wait/compute split lands under the request's tree.
         with telemetry.get_tracer().span("pool.get_scores",
                                          rows=len(pairs)):
-            out = np.asarray(self.submit(pairs, deadline_abs).result())
+            # ``submit`` re-routes synchronous stopped-batcher rejections,
+            # but an enqueue can also land on a retiring batcher in the gap
+            # between its drain and its stop (hot-swap step 4) and fail
+            # asynchronously. Scoring is pure, the item was never scored —
+            # resubmitting is lossless, so a swap never fails a request.
+            for attempt in range(3):
+                try:
+                    out = np.asarray(
+                        self.submit(pairs, deadline_abs).result())
+                    break
+                except RuntimeError as e:
+                    if (isinstance(e, ShedError)
+                            or "MicroBatcher stopped" not in str(e)
+                            or attempt == 2):
+                        raise
+                    telemetry.get_registry().inc("pool_swap_reroutes")
         self.tracker.observe(time.perf_counter() - t0, n=len(pairs))
         return out
 
@@ -181,6 +237,64 @@ class ReplicaPool:
                 s[f"{r.name}_{k}"] = v
         s.update(self.features.stats())
         return s
+
+    # -- hot-swap --------------------------------------------------------------
+
+    def _swap_replica(self, rep: Replica, scorer, drain_timeout_s: float):
+        """Zero-loss batcher replacement for one replica:
+
+          1. mark draining    — ``_pick`` routes new work elsewhere;
+          2. install the NEW batcher — any submit that already picked this
+             replica lands on the new model from here on;
+          3. run the OLD batcher's backlog dry — queued rows finish on the
+             model they were admitted under;
+          4. rejoin, then stop the old batcher — a straggler that still
+             holds the old batcher object gets the synchronous stopped
+             rejection and ``submit`` re-routes it (see there).
+        """
+        rep.draining = True
+        old = rep.batcher
+        rep.batcher = MicroBatcher(scorer, self.max_batch, self.max_wait_s)
+        deadline = time.perf_counter() + drain_timeout_s
+        while old.outstanding_rows > 0 and time.perf_counter() < deadline:
+            time.sleep(0.001)
+        rep.draining = False
+        old.stop()
+
+    def swap_version(self, version: str, registry,
+                     drain_timeout_s: float = 10.0) -> str:
+        """Hot-swap every replica to registry ``version`` ("latest", an id,
+        or a unique prefix), one replica at a time, under load, without
+        failing a request. Returns the resolved version id. Only pools
+        constructed via ``build`` know their backend/cfg and can swap."""
+        if self._build_info is None:
+            raise RuntimeError("pool was built from raw scorers; only "
+                               "ReplicaPool.build pools can swap_version")
+        with self._swap_lock:
+            if self._swapping:
+                raise RuntimeError("swap already in progress")
+            self._swapping = True
+        try:
+            from repro.core import backends as BK
+            backend, cfg, buckets = self._build_info
+            vid = registry.resolve(version)
+            params = registry.load_params(vid,
+                                          template=self._params_template)
+            t0 = time.perf_counter()
+            for rep in self.replicas:
+                scorer = BK.make_scorer(backend, params, cfg,
+                                        buckets=buckets)
+                self._swap_replica(rep, scorer, drain_timeout_s)
+            self._params_template = params
+            self.model_version = vid
+            registry_m = telemetry.get_registry()
+            registry_m.inc("pool_swaps")
+            registry_m.observe("pool_swap_ms",
+                               (time.perf_counter() - t0) * 1e3)
+            return vid
+        finally:
+            with self._swap_lock:
+                self._swapping = False
 
     def stop(self):
         for r in self.replicas:

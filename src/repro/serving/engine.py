@@ -15,6 +15,7 @@ latency tracker, lowering the description to whichever execution target the
 deployment wants instead of hard-coding an engine class per strategy."""
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -119,6 +120,13 @@ class PipelineEngine:
     sheds expired-on-arrival requests before any retrieval work, and
     ``rows_per_query`` (retrieve depth x max sentences per doc, clipped by
     the pipeline's cutoffs) sizes ranking requests for admission control.
+
+    With a registry-bound context the engine is also the hot-swap unit:
+    ``swap_version`` re-plans against a rebound context and swaps the plan
+    reference atomically (in-flight requests finish on the plan object
+    they started on), and every request metric carries a ``model_version``
+    label so per-version traffic separates in merged snapshots — the
+    rollout controller's A/B and guardrail signals (see serving.rollout).
     """
 
     #: core.service passes the decoded wire deadline into ``rank_batch`` so
@@ -128,8 +136,15 @@ class PipelineEngine:
     def __init__(self, pipeline, ctx, target: str = "batched"):
         from repro.core.plan import candidate_bound, plan as _plan
         self.pipeline = pipeline
+        self.ctx = ctx
+        self.target = target
         self.plan = _plan(pipeline, target, ctx)
         self.tracker = LatencyTracker()
+        self.model_version: str = (getattr(ctx, "model_version", None)
+                                   or "unversioned")
+        self.swaps = 0
+        self._swap_lock = threading.Lock()  # serializes the claim flag only
+        self._swapping = False
         #: Admission row estimate for one ranking query: the planner's
         #: candidate bound on the widest rerank stage (never below 1 so a
         #: rerank-free pipeline still counts each query).
@@ -138,17 +153,65 @@ class PipelineEngine:
     def rank(self, query: str):
         t0 = time.perf_counter()
         out = self.plan.run(query)
-        self.tracker.observe(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.tracker.observe(dt)
+        registry = telemetry.get_registry()
+        registry.inc("engine_rank_queries", model_version=self.model_version)
+        registry.observe("engine_rank_ms", dt * 1e3,
+                         model_version=self.model_version)
         return out
 
     def rank_many(self, queries: Sequence[str]):
         t0 = time.perf_counter()
+        version = self.model_version  # one label per call, even mid-swap
         with telemetry.get_tracer().span("engine.rank_many",
-                                         queries=len(queries)):
+                                         queries=len(queries),
+                                         model_version=version):
             out = self.plan.run_many(queries)
-        self.tracker.observe(time.perf_counter() - t0,
-                             n=max(len(queries), 1))
+        dt = time.perf_counter() - t0
+        self.tracker.observe(dt, n=max(len(queries), 1))
+        registry = telemetry.get_registry()
+        registry.inc("engine_rank_queries", float(len(queries)),
+                     model_version=version)
+        registry.observe("engine_rank_ms", dt * 1e3, model_version=version)
         return out
+
+    def swap_version(self, version: str) -> str:
+        """Hot-swap to registry ``version`` ("latest", an id, or a unique
+        prefix) with zero downtime. Local/batched targets re-plan against a
+        rebound context off to the side (fresh scorers compile while the
+        OLD plan keeps serving) and then swap the plan reference
+        atomically; the remote target delegates to the in-process
+        ``ReplicaPool``'s replica-by-replica swap. Returns the resolved
+        version id; on any failure the old version keeps serving."""
+        registry = getattr(self.ctx, "registry", None)
+        if registry is None:
+            raise RuntimeError("no model registry bound in the PlanContext; "
+                               "serve with --registry (or PlanContext("
+                               "registry=...)) to enable hot-swap")
+        with self._swap_lock:
+            if self._swapping:
+                raise RuntimeError("swap already in progress")
+            self._swapping = True
+        try:
+            pool = getattr(self.ctx, "remote", None)
+            if self.target in ("remote", "remote_pipeline") \
+                    and hasattr(pool, "swap_version"):
+                vid = pool.swap_version(version, registry)
+            else:
+                from repro.core.plan import plan as _plan
+                new_ctx = self.ctx.bind_version(version)
+                new_plan = _plan(self.pipeline, self.target, new_ctx)
+                self.ctx = new_ctx
+                self.plan = new_plan    # atomic reference swap: in-flight
+                vid = new_ctx.model_version  # work finishes on the old plan
+            self.model_version = vid
+            self.swaps += 1
+        finally:
+            with self._swap_lock:
+                self._swapping = False
+        telemetry.get_registry().inc("engine_swaps")
+        return vid
 
     def rank_batch(self, queries: Sequence[str],
                    deadline_abs: Optional[float] = None):
@@ -172,4 +235,5 @@ class PipelineEngine:
         s = self.tracker.summary()
         s.update(self.plan.cache_stats())
         s["rows_per_query"] = float(self.rows_per_query)
+        s["swaps"] = float(self.swaps)
         return s

@@ -211,6 +211,17 @@ class WorkerEndpoint:
         MetricsRegistry snapshot + recent finished spans."""
         return self.control.stats()
 
+    def version(self) -> Tuple[str, str]:
+        """(active model version, status) over MSG_VERSION."""
+        return self.control.version()
+
+    def swap(self, version: str,
+             deadline_s: Optional[float] = None) -> Tuple[str, str]:
+        """Hot-swap the worker to registry ``version`` over MSG_SWAP (the
+        worker must have been spawned with ``--registry``). Runs on the
+        control connection: a swap must not queue behind rank traffic."""
+        return self.control.swap(version, deadline_s=deadline_s)
+
     def close(self) -> None:
         for c in (self.client, self.control):
             try:
@@ -496,6 +507,35 @@ class Fabric:
             snap = ep.probe()
         self.router.probe_once()        # propagate draining=1 to routing
         return snap
+
+    def swap_worker(self, slot: int, version: str,
+                    timeout_s: float = 30.0) -> Tuple[str, str]:
+        """Hot-swap one worker to registry ``version`` with zero request
+        loss: drain (router stops routing to the slot, in-flight work
+        finishes), MSG_SWAP on the control connection (the worker engine
+        re-plans on the new version and REJOINS — a successful swap clears
+        its draining flag server-side), then a probe round so the router
+        sees the slot routable again. The worker process never restarts:
+        its jit caches, sockets and featurization cache survive."""
+        if not self._claim_slot(slot):
+            raise RuntimeError(f"worker {slot} is already cycling")
+        try:
+            assert self.router is not None
+            self.drain_worker(slot, timeout_s=timeout_s)
+            ep = self.router._endpoints[slot]
+            vid, status = ep.swap(version, deadline_s=timeout_s)
+            self.router.probe_once()    # draining cleared -> routable
+        finally:
+            self._release_slot(slot)
+        return vid, status
+
+    def swap_fleet(self, version: str,
+                   timeout_s: float = 30.0) -> List[Tuple[str, str]]:
+        """Rolling hot-swap of every worker, one slot at a time, so the
+        rest of the fleet keeps absorbing traffic while each slot drains
+        and reloads. Returns the per-slot (version, status) replies."""
+        return [self.swap_worker(slot, version, timeout_s=timeout_s)
+                for slot in range(len(self.workers))]
 
     def restart_worker(self, slot: int,
                        timeout_s: float = 30.0) -> Tuple[str, int]:

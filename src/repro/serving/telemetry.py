@@ -53,8 +53,9 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 __all__ = [
     "MetricsRegistry", "Tracer", "SpanRecord", "SpanContext",
     "get_registry", "get_tracer", "reset_all",
-    "merge_snapshots", "export_chrome_trace", "chrome_trace_events",
-    "span_tree", "format_span_tree", "stage_breakdown",
+    "merge_snapshots", "split_by_label", "export_chrome_trace",
+    "chrome_trace_events", "span_tree", "format_span_tree",
+    "stage_breakdown",
 ]
 
 #: Default histogram bucket upper bounds, in milliseconds (latency-shaped).
@@ -192,6 +193,34 @@ def merge_snapshots(snaps: Iterable[Dict[str, float]]) -> Dict[str, float]:
     for snap in snaps:
         for k, v in snap.items():
             out[k] = out.get(k, 0.0) + v
+    return out
+
+
+def _key_label(key: str, label: str) -> Optional[str]:
+    """Value of ``label`` in a flattened metric key, or None. Label values
+    never contain ``,``/``}`` (they come from ``_metric_key``), so plain
+    splitting is exact."""
+    if not key.endswith("}"):
+        return None
+    _, _, inner = key.partition("{")
+    for part in inner[:-1].split(","):
+        k, _, v = part.partition("=")
+        if k == label:
+            return v
+    return None
+
+
+def split_by_label(snapshot: Dict[str, float], label: str
+                   ) -> Dict[str, Dict[str, float]]:
+    """Group a flat snapshot's keys by one label's value — e.g.
+    ``split_by_label(fabric.aggregate_metrics(), "model_version")`` returns
+    per-version metric dicts, which is how A/B arms separate after
+    cross-worker aggregation (see serving.rollout). Keys that do not carry
+    the label land under ``""``; full keys are preserved in each group."""
+    out: Dict[str, Dict[str, float]] = {}
+    for key, value in snapshot.items():
+        group = _key_label(key, label) or ""
+        out.setdefault(group, {})[key] = value
     return out
 
 

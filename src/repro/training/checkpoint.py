@@ -78,6 +78,16 @@ class CheckpointManager:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    # -- serving handoff -------------------------------------------------------
+
+    def publish_to_registry(self, registry, step: Optional[int] = None):
+        """Promote a checkpoint (latest by default) into a serving
+        ``core.registry.ModelRegistry``: the params container is re-published
+        under a content-hashed version id, decoupling serving rollout from
+        the keep-K retention window here — a promoted version outlives
+        ``_prune``. Returns the registry's ``ModelVersion``."""
+        return registry.publish_checkpoint(self, step=step)
+
     def restore(self, params_template: Any, opt_template: Any = None,
                 step: Optional[int] = None, shardings: Any = None
                 ) -> Tuple[Any, Any, int]:

@@ -1,0 +1,97 @@
+"""Per-bucket service-time EWMAs in the admission controller: cheap
+batch-64 traffic must not deflate the wait estimate for expensive batch-1
+requests (the regression the single global EWMA had)."""
+import time
+
+import pytest
+
+from repro.serving.admission import (SERVICE_BUCKETS, SHED_LATE,
+                                     AdmissionController, _bucket_of)
+
+# Realistic mixed-traffic shape: a big batch amortizes dispatch overhead,
+# so its PER-ROW cost is ~50x cheaper than a single-row request's.
+CHEAP_64_PER_ROW_S = 1e-4    # 6.4ms for 64 rows
+COSTLY_1_PER_ROW_S = 5e-3    # 5ms for 1 row
+
+
+def _mixed_traffic(ac: AdmissionController, rounds: int = 20):
+    """Mostly cheap batch-64 releases with occasional batch-1 releases —
+    the mix that drags a single global EWMA far below batch-1 reality."""
+    for _ in range(rounds):
+        for _ in range(9):
+            ac.release(64, service_s=64 * CHEAP_64_PER_ROW_S)
+        ac.release(1, service_s=COSTLY_1_PER_ROW_S)
+
+
+def test_bucket_of_edges():
+    assert _bucket_of(1) == 1.0
+    assert _bucket_of(2) == 8.0
+    assert _bucket_of(8) == 8.0
+    assert _bucket_of(64) == 64.0
+    assert _bucket_of(65) == float("inf")
+    assert _bucket_of(10_000) == SERVICE_BUCKETS[-1]
+
+
+def test_single_ewma_would_mispredict_batch1():
+    """The regression: under the cheap-batch-dominated mix, the GLOBAL
+    EWMA predicts a batch-1 request comfortably meets a 2ms deadline (it
+    would have been admitted and then missed it); the per-bucket estimate
+    prices it at observed batch-1 cost and sheds it as late."""
+    ac = AdmissionController(max_queue_rows=4096)
+    _mixed_traffic(ac)
+    stats = ac.stats()
+
+    # The old single-EWMA estimate really is deflated by the cheap rows...
+    global_wait_s = stats["row_service_ms"] / 1e3    # per-row x 1 row
+    deadline_budget_s = 0.002
+    assert global_wait_s < deadline_budget_s, \
+        "mix no longer deflates the global EWMA; regression test is stale"
+    # ...while the bucketed estimate prices batch-1 at batch-1 cost:
+    assert ac.estimated_wait_s(1) == pytest.approx(COSTLY_1_PER_ROW_S,
+                                                   rel=0.5)
+    now = time.perf_counter()
+    reason = ac.try_admit(1, deadline_abs=now + deadline_budget_s, now=now)
+    assert reason == SHED_LATE
+
+
+def test_batch64_still_admitted_under_its_own_bucket():
+    ac = AdmissionController(max_queue_rows=4096)
+    _mixed_traffic(ac)
+    now = time.perf_counter()
+    # 64 cheap rows ~ 6.4ms: a 50ms budget admits easily.
+    assert ac.try_admit(64, deadline_abs=now + 0.05, now=now) is None
+    ac.release(64, service_s=64 * CHEAP_64_PER_ROW_S)
+    # And a batch-1 with a budget above its true cost is admitted too.
+    assert ac.try_admit(1, deadline_abs=now + 0.05, now=now) is None
+    ac.release(1, service_s=COSTLY_1_PER_ROW_S)
+
+
+def test_unseen_bucket_falls_back_to_global_ewma():
+    ac = AdmissionController(max_queue_rows=4096, init_row_service_s=1e-3)
+    # Only batch-64 traffic observed; a batch-8 request has no bucket yet.
+    for _ in range(10):
+        ac.release(64, service_s=64 * CHEAP_64_PER_ROW_S)
+    est = ac.estimated_wait_s(8)
+    global_per_row = ac.stats()["row_service_ms"] / 1e3
+    assert est == pytest.approx(8 * global_per_row, rel=1e-6)
+
+
+def test_stats_expose_per_bucket_estimates():
+    ac = AdmissionController(max_queue_rows=4096)
+    _mixed_traffic(ac)
+    ac.release(500, service_s=500 * CHEAP_64_PER_ROW_S)   # overflow bucket
+    stats = ac.stats()
+    assert stats["row_service_ms_le_1"] == pytest.approx(
+        COSTLY_1_PER_ROW_S * 1e3, rel=0.5)
+    assert stats["row_service_ms_le_64"] == pytest.approx(
+        CHEAP_64_PER_ROW_S * 1e3, rel=0.5)
+    assert "row_service_ms_le_inf" in stats
+    assert "row_service_ms_le_8" not in stats             # never observed
+
+
+def test_scorer_side_source_still_wins_over_buckets():
+    ac = AdmissionController(max_queue_rows=4096)
+    _mixed_traffic(ac)
+    ac.set_service_time_source(lambda: 2e-3)
+    assert ac.estimated_wait_s(1) == pytest.approx(2e-3, rel=1e-6)
+    assert ac.estimated_wait_s(64) == pytest.approx(64 * 2e-3, rel=1e-6)

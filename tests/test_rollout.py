@@ -1,0 +1,527 @@
+"""Live model rollout: registry versioning, zero-downtime hot-swap under
+load, guardrail rollback, shadow mirroring, A/B splits, and the MSG_SWAP /
+MSG_VERSION control plane (core.registry + serving.rollout).
+
+The fast set includes the tier-1 swap smoke: a 2-replica pool hot-swapped
+under concurrent load with zero failed requests and post-swap scores
+verified against the new version's scorer.
+"""
+import math
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import backends as BK
+from repro.core import bm25 as BM
+from repro.core import ops
+from repro.core import service as SV
+from repro.core.plan import PlanContext, PlanError
+from repro.core.registry import (ModelRegistry, RegistryError, content_hash,
+                                 nest_flat)
+from repro.data import qa as QA
+from repro.data.tokenizer import HashingTokenizer
+from repro.models import sm_cnn
+from repro.serving import telemetry
+from repro.serving.cluster import ReplicaPool
+from repro.serving.engine import PipelineEngine
+from repro.serving.rollout import (ABEngine, RolloutController, ShadowEngine,
+                                   query_bucket, sample_query)
+
+BUCKETS = (1, 8)
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_config("sm-cnn"))
+    corpus = QA.generate_corpus(n_docs=24, n_questions=10, seed=9)
+    tok = HashingTokenizer(cfg.vocab_size)
+    index = BM.build_index(
+        [tok.encode(" ".join(d)) for d in corpus.documents], cfg.vocab_size)
+    params_a = sm_cnn.init_sm_cnn(jax.random.PRNGKey(0), cfg)
+    # A cheap, structurally identical second version with different scores.
+    params_b = jax.tree.map(lambda x: x * 1.5, params_a)
+    return cfg, params_a, params_b, corpus, tok, index
+
+
+@pytest.fixture()
+def registry(world, tmp_path):
+    cfg, params_a, params_b, *_ = world
+    reg = ModelRegistry(str(tmp_path / "registry"))
+    va = reg.publish(params_a, model=cfg.name).version_id
+    vb = reg.publish(params_b, model=cfg.name).version_id
+    return reg, va, vb
+
+
+def _pairs(corpus, n=4):
+    return [(corpus.questions[i % len(corpus.questions)],
+             corpus.documents[i % len(corpus.documents)][0])
+            for i in range(n)]
+
+
+def _ctx(world, reg, version):
+    cfg, params_a, _, corpus, tok, index = world
+    return PlanContext.from_world(cfg, params_a, corpus, tok, index,
+                                  buckets=BUCKETS, registry=reg,
+                                  model_version=version)
+
+
+def _engine(world, reg, version, backend="numpy"):
+    pipeline = ops.Retrieve(h=8) >> ops.Rerank(backend, k=3)
+    return PipelineEngine(pipeline, _ctx(world, reg, version),
+                          target="batched")
+
+
+# ---------------------------------------------------------------- registry --
+
+def test_registry_publish_is_idempotent_and_content_addressed(world,
+                                                              tmp_path):
+    cfg, params_a, params_b, *_ = world
+    reg = ModelRegistry(str(tmp_path / "reg"))
+    v1 = reg.publish(params_a)
+    v2 = reg.publish(params_a)          # same weights -> same version
+    assert v1.version_id == v2.version_id
+    assert reg.list_versions() == [v1.version_id]
+    v3 = reg.publish(params_b)          # different weights -> new version
+    assert v3.version_id != v1.version_id
+    assert len(reg.list_versions()) == 2
+
+
+def test_registry_resolve_latest_prefix_unknown(registry):
+    reg, va, vb = registry
+    assert reg.resolve("latest") == vb           # published second
+    assert reg.resolve(va) == va
+    assert reg.resolve(va[:8]) == va             # unique prefix
+    with pytest.raises(RegistryError, match="unknown"):
+        reg.resolve("v-000000000000")
+    with pytest.raises(RegistryError, match="ambiguous"):
+        reg.resolve("v-")                        # matches both
+
+
+def test_registry_load_params_roundtrip_and_hash_verification(world,
+                                                              registry):
+    import json
+    import os
+    cfg, params_a, _, *_ = world
+    reg, va, vb = registry
+    loaded = reg.load_params(va, template=params_a)
+    for want, got in zip(jax.tree.leaves(params_a), jax.tree.leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                                   rtol=0, atol=0)
+    # Tamper with the recorded hash: load must refuse the blob.
+    mpath = os.path.join(reg.get(vb).path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["content_hash"] = "0" * 64
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(RegistryError, match="hash"):
+        reg.load(vb)
+
+
+def test_nest_flat_rebuilds_nested_tree():
+    flat = {"conv/w": np.ones((2, 2)), "conv/b": np.zeros(2),
+            "out": np.ones(3)}
+    nested = nest_flat(flat)
+    assert set(nested) == {"conv", "out"}
+    assert set(nested["conv"]) == {"w", "b"}
+    with pytest.raises(RegistryError):
+        nest_flat({"a": np.ones(1), "a/b": np.ones(1)})
+
+
+def test_content_hash_sensitive_to_values_and_names():
+    base = {"w": np.arange(4, dtype=np.float32)}
+    assert content_hash(base) == content_hash(
+        {"w": np.arange(4, dtype=np.float32)})
+    assert content_hash(base) != content_hash(
+        {"w2": np.arange(4, dtype=np.float32)})
+    assert content_hash(base) != content_hash(
+        {"w": np.arange(1, 5, dtype=np.float32)})
+
+
+def test_plan_context_version_binding(world, registry):
+    cfg, params_a, params_b, corpus, tok, index = world
+    reg, va, vb = registry
+    ctx = _ctx(world, reg, vb[:8])      # prefix resolves at construction
+    assert ctx.model_version == vb
+    for want, got in zip(jax.tree.leaves(params_b),
+                         jax.tree.leaves(ctx.params)):
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                                   rtol=0, atol=0)
+    back = ctx.bind_version(va)
+    assert back.model_version == va and ctx.model_version == vb
+    plain = PlanContext.from_world(cfg, params_a, corpus, tok, index)
+    with pytest.raises(PlanError, match="registry"):
+        plain.bind_version(va)
+
+
+# ------------------------------------------------- pool hot-swap (tier-1) --
+
+def test_pool_hot_swap_zero_loss_under_load(world, registry):
+    """The tier-1 swap smoke: a 2-replica pool under concurrent load
+    hot-swaps replica by replica with ZERO failed requests, and post-swap
+    scores match the new version's scorer exactly."""
+    cfg, params_a, params_b, corpus, tok, index = world
+    reg, va, vb = registry
+    pool = ReplicaPool.build("numpy", params_a, cfg, tok, corpus.idf,
+                             n_replicas=2, buckets=BUCKETS)
+    pool.model_version = va
+    pairs = _pairs(corpus, 4)
+    errors, ok = [], [0]
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            try:
+                out = pool.get_scores(pairs)
+                assert out.shape == (len(pairs),)
+                with lock:
+                    ok[0] += 1
+            except Exception as e:  # noqa: BLE001 — the assertion target
+                with lock:
+                    errors.append(repr(e))
+
+    threads = [threading.Thread(target=pump) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        time.sleep(0.1)                          # warm load before the swap
+        vid = pool.swap_version(vb, reg)
+        time.sleep(0.1)                          # load across the rejoin
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert errors == []
+    assert ok[0] > 0
+    assert vid == vb and pool.model_version == vb
+
+    scorer_b = BK.make_scorer("numpy", params_b, cfg, buckets=BUCKETS)
+    handler_b = SV.QuestionAnsweringHandler(scorer_b, tok, corpus.idf,
+                                            cfg.max_len)
+    want = np.asarray(handler_b.get_scores(pairs))
+    got = pool.get_scores(pairs)
+    pool.stop()
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_pool_swap_requires_build_provenance(world, registry):
+    cfg, params_a, _, corpus, tok, index = world
+    reg, va, vb = registry
+    scorers = [BK.make_scorer("numpy", params_a, cfg, buckets=BUCKETS)]
+    pool = ReplicaPool(scorers, tok, corpus.idf, cfg.max_len)
+    with pytest.raises(RuntimeError, match="build"):
+        pool.swap_version(vb, reg)
+    pool.stop()
+
+
+# --------------------------------------------------------- engine hot-swap --
+
+def test_engine_swap_labels_metrics_per_version(world, registry):
+    reg, va, vb = registry
+    telemetry.reset_all()
+    engine = _engine(world, reg, va)
+    _, _, _, corpus, _, _ = world
+    engine.rank_batch(corpus.questions[:3])
+    assert engine.model_version == va
+    vid = engine.swap_version(vb)
+    assert vid == vb and engine.model_version == vb
+    engine.rank_batch(corpus.questions[:3])
+    assert engine.stats()["swaps"] == 1.0
+
+    groups = telemetry.split_by_label(telemetry.get_registry().snapshot(),
+                                      "model_version")
+    assert va in groups and vb in groups
+    assert any(k.startswith("engine_rank_queries") for k in groups[va])
+    assert any(k.startswith("engine_rank_queries") for k in groups[vb])
+
+
+def test_engine_swap_without_registry_is_refused(world):
+    cfg, params_a, _, corpus, tok, index = world
+    ctx = PlanContext.from_world(cfg, params_a, corpus, tok, index,
+                                 buckets=BUCKETS)
+    engine = PipelineEngine(ops.Retrieve(h=8) >> ops.Rerank("numpy", k=3),
+                            ctx, target="batched")
+    with pytest.raises(RuntimeError, match="registry"):
+        engine.swap_version("latest")
+
+
+# ------------------------------------------------------ guardrail rollback --
+
+def test_rollout_controller_rolls_back_broken_version(world, registry):
+    """The acceptance demo: a deliberately broken (NaN-poisoned) candidate
+    is swapped in, fails its canaries, and the controller automatically
+    rolls back to the previous version — which must still serve."""
+    cfg, params_a, _, corpus, _, _ = world
+    reg, va, vb = registry
+    bad = jax.tree.map(
+        lambda x: np.full(np.shape(x), np.nan,
+                          dtype=np.asarray(x).dtype), params_a)
+    vbad = reg.publish(bad, model="broken").version_id
+
+    engine = _engine(world, reg, va)
+    ctrl = RolloutController(engine, canary_queries=corpus.questions[:4],
+                             canary_passes=1)
+    report = ctrl.hot_swap(vbad)
+    assert report.rolled_back and not report.swapped
+    assert "error rate" in report.reason
+    assert report.candidate.errors > 0
+    assert report.previous_version == va
+    assert report.active_version == va == engine.model_version
+    rankings = engine.rank_batch([corpus.questions[0]])
+    assert all(math.isfinite(float(s)) for _, _, s in rankings[0])
+
+    good = ctrl.hot_swap(vb)             # a healthy candidate still lands
+    assert good.swapped and not good.rolled_back
+    assert good.active_version == vb == engine.model_version
+
+
+def test_rollout_controller_requires_canaries(world, registry):
+    reg, va, _ = registry
+    with pytest.raises(Exception, match="canary"):
+        RolloutController(_engine(world, reg, va), canary_queries=[])
+
+
+# ----------------------------------------------------------------- A/B -----
+
+def test_query_bucket_is_deterministic_and_fractional():
+    qs = [f"query variant {i}" for i in range(400)]
+    assert [query_bucket(q) for q in qs] == [query_bucket(q) for q in qs]
+    hit = sum(sample_query(q, 0.25) for q in qs)
+    assert 0.15 * len(qs) < hit < 0.35 * len(qs)
+    assert not any(sample_query(q, 0.0) for q in qs)
+    assert all(sample_query(q, 1.0) for q in qs)
+
+
+def test_ab_engine_routes_deterministically_with_per_arm_metrics(world,
+                                                                 registry):
+    reg, va, vb = registry
+    telemetry.reset_all()
+    arm_a = _engine(world, reg, va)
+    arm_b = _engine(world, reg, vb)
+    ab = ABEngine(arm_a, arm_b, split_pct=50.0)
+    queries = [f"which document mentions topic {i}" for i in range(16)]
+    arms = [ab.arm_of(q) for q in queries]
+    assert arms == [ab.arm_of(q) for q in queries]      # stable routing
+    assert {"a", "b"} == set(arms)                       # both arms hit
+
+    out = ab.rank_batch(queries)
+    assert len(out) == len(queries)
+    for q, ranking in zip(queries, out):
+        engine = arm_b if ab.arm_of(q) == "b" else arm_a
+        solo = engine.rank_batch([q])[0]
+        assert [(d, s) for d, s, _ in ranking] == [(d, s)
+                                                   for d, s, _ in solo]
+
+    snap = telemetry.get_registry().snapshot()
+    assert any(k.startswith("ab_queries") and va in k for k in snap)
+    assert any(k.startswith("ab_queries") and vb in k for k in snap)
+    groups = telemetry.split_by_label(snap, "model_version")
+    assert va in groups and vb in groups                 # arms separable
+
+
+def test_ab_engine_rejects_bad_split():
+    with pytest.raises(ValueError, match="split_pct"):
+        ABEngine(object(), object(), split_pct=120.0)
+
+
+# ------------------------------------------------------- wire control plane --
+
+def test_client_version_and_swap_rpcs(world, registry):
+    """MSG_VERSION / MSG_SWAP end to end: probe the served version, swap
+    it live over the wire, keep serving, and reject unknown versions with
+    a clean error while the old version stays up."""
+    _, _, _, corpus, _, _ = world
+    reg, va, vb = registry
+    engine = _engine(world, reg, va)
+    srv = SV.SimpleServer(engine).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            assert cl.version() == (va, "active")
+            assert cl.swap(vb) == (vb, "swapped")
+            assert cl.version() == (vb, "active")
+            rankings = cl.rank_batch(corpus.questions[:2])
+            assert len(rankings) == 2 and rankings[0]
+            with pytest.raises(RuntimeError, match="failed"):
+                cl.swap("v-000000000000")
+            assert cl.version() == (vb, "active")   # old version kept
+    finally:
+        srv.stop()
+
+
+def test_swap_rpc_against_versionless_handler_errors_cleanly(world):
+    cfg, params_a, _, corpus, tok, _ = world
+    scorer = BK.make_scorer("numpy", params_a, cfg, buckets=BUCKETS)
+    handler = SV.QuestionAnsweringHandler(scorer, tok, corpus.idf,
+                                          cfg.max_len)
+    srv = SV.SimpleServer(handler).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            assert cl.version()[0] == "unversioned"
+            with pytest.raises(RuntimeError, match="swap"):
+                cl.swap("latest")
+            # connection survives the refused swap
+            assert isinstance(cl.get_score(corpus.questions[0],
+                                           corpus.documents[0][0]), float)
+    finally:
+        srv.stop()
+
+
+# ------------------------------------------------------------ shadow (slow) --
+
+@pytest.mark.slow
+def test_shadow_engine_mirrors_and_records_divergence(world, registry):
+    reg, va, vb = registry
+    telemetry.reset_all()
+    primary = _engine(world, reg, va)
+    reference = _engine(world, reg, va)
+    candidate = _engine(world, reg, vb)
+    shadow = ShadowEngine(primary, candidate, fraction=1.0, max_pending=4)
+    _, _, _, corpus, _, _ = world
+    queries = list(corpus.questions[:8])
+
+    out = shadow.rank_batch(queries)
+    want = reference.rank_batch(queries)
+    assert [[d for d, _, _ in r] for r in out] == \
+           [[d for d, _, _ in r] for r in want]   # primary path untouched
+    assert shadow.drain(10.0)
+
+    snap = telemetry.get_registry().snapshot()
+    mirrored = sum(v for k, v in snap.items()
+                   if k.startswith("shadow_queries"))
+    assert mirrored > 0
+    assert any(k.startswith("shadow_rank_ms") and vb in k for k in snap)
+    assert any(k.startswith("shadow_score_divergence") and vb in k
+               for k in snap)
+    assert not any(k.startswith("shadow_errors") for k in snap)
+    assert shadow.model_version == va            # candidate stays invisible
+
+
+@pytest.mark.slow
+def test_shadow_engine_never_surfaces_candidate_failures(world, registry):
+    cfg, params_a, _, corpus, _, _ = world
+    reg, va, _ = registry
+    telemetry.reset_all()
+
+    class Exploding:
+        model_version = "v-broken"
+
+        def rank_batch(self, queries, deadline_abs=None):
+            raise RuntimeError("candidate kaboom")
+
+    shadow = ShadowEngine(_engine(world, reg, va), Exploding(),
+                          fraction=1.0)
+    out = shadow.rank_batch(list(corpus.questions[:4]))
+    assert len(out) == 4 and all(out)
+    assert shadow.drain(10.0)
+    snap = telemetry.get_registry().snapshot()
+    assert sum(v for k, v in snap.items()
+               if k.startswith("shadow_errors")) > 0
+
+
+# -------------------------------------------------- soak + fabric (slow) ----
+
+@pytest.mark.slow
+def test_pool_swap_soak_under_poisson_load(world, registry):
+    """Open-loop Poisson arrivals across REPEATED swaps (a->b->a->b): no
+    request may fail, and the pool must land on the final version."""
+    import random
+    cfg, params_a, params_b, corpus, tok, _ = world
+    reg, va, vb = registry
+    pool = ReplicaPool.build("numpy", params_a, cfg, tok, corpus.idf,
+                             n_replicas=2, buckets=BUCKETS)
+    pairs = _pairs(corpus, 2)
+    errors, ok = [], [0]
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def open_loop(seed):
+        rng = random.Random(seed)
+        while not stop.is_set():
+            time.sleep(rng.expovariate(1.0 / 0.003))   # ~3ms inter-arrival
+            try:
+                pool.get_scores(pairs)
+                with lock:
+                    ok[0] += 1
+            except Exception as e:  # noqa: BLE001 — the assertion target
+                with lock:
+                    errors.append(repr(e))
+
+    threads = [threading.Thread(target=open_loop, args=(i,))
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for target in (vb, va, vb):
+            time.sleep(0.25)
+            assert pool.swap_version(target, reg) == target
+        time.sleep(0.25)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    pool.stop()
+    assert errors == []
+    assert ok[0] > 50
+    assert pool.model_version == vb
+
+
+@pytest.mark.slow
+def test_fabric_rolling_swap_and_per_version_aggregate(tmp_path):
+    """Whole-fleet rollout: 2 worker PROCESSES serving a registry version,
+    one hot-swapped to a candidate over MSG_SWAP while the fleet keeps
+    answering; ``Fabric.aggregate_metrics()`` then separates the versions
+    by their ``model_version`` labels (the A/B readout)."""
+    from repro.launch.world import build_world
+    from repro.serving.fabric import Fabric
+
+    cfg, params, corpus, tok, index, _ = build_world(train_steps=1)
+    reg_dir = str(tmp_path / "registry")
+    reg = ModelRegistry(reg_dir)
+    va = reg.publish(params, model=cfg.name).version_id
+    vb = reg.publish(jax.tree.map(lambda x: x * 1.5, params),
+                     model=cfg.name).version_id
+
+    queries = [f"fleet question number {i}" for i in range(6)]
+    with Fabric(n_workers=2, backend="numpy", train_steps=1,
+                probe_interval_s=0.05,
+                extra_args=("--registry", reg_dir,
+                            "--model-version", va)) as fab:
+        for q in queries:
+            assert fab.router.rank_batch([q])
+        assert fab.router._endpoints[0].version() == (va, "active")
+
+        errors = []
+        stop = threading.Event()
+
+        def pump():
+            while not stop.is_set():
+                try:
+                    fab.router.rank_batch([queries[0]])
+                except Exception as e:  # noqa: BLE001
+                    errors.append(repr(e))
+
+        t = threading.Thread(target=pump)
+        t.start()
+        try:
+            vid, status = fab.swap_worker(1, vb)
+        finally:
+            stop.set()
+            t.join()
+        assert (vid, status) == (vb, "swapped")
+        assert errors == []              # zero failed requests over the swap
+        assert fab.router._endpoints[1].version() == (vb, "active")
+
+        for q in queries:                # traffic lands on both versions
+            fab.router.rank_batch([q])
+        groups = telemetry.split_by_label(fab.aggregate_metrics(),
+                                          "model_version")
+        assert va in groups and vb in groups
+        assert any(k.startswith("engine_rank_queries")
+                   for k in groups[va])
+        assert any(k.startswith("engine_rank_queries")
+                   for k in groups[vb])

@@ -555,3 +555,68 @@ def test_fuzz_truncated_v5_frames_only_raise_value_error(frame, decoder):
             decoder(t, payload[:cut])
         except ValueError:
             pass
+
+
+# ----------------------------- rollout control frames (version/swap, PR 9)
+
+def test_version_request_roundtrip():
+    t, payload = _frame_parts(wire.encode_version())
+    assert t == wire.MSG_VERSION
+    assert wire.decode_control_request(t, payload) is None
+    t, payload = _frame_parts(wire.encode_version(deadline_s=0.5))
+    assert wire.decode_control_request(t, payload) == pytest.approx(0.5)
+
+
+def test_swap_request_roundtrip():
+    t, payload = _frame_parts(wire.encode_swap("v-0123abcd4567"))
+    assert t == wire.MSG_SWAP
+    assert wire.decode_swap_request(t, payload) == ("v-0123abcd4567", None)
+    t, payload = _frame_parts(wire.encode_swap("latest", deadline_s=2.0))
+    version, deadline = wire.decode_swap_request(t, payload)
+    assert version == "latest" and deadline == pytest.approx(2.0)
+
+
+def test_swap_request_wrong_type_raises():
+    _, payload = _frame_parts(wire.encode_swap("v-x"))
+    with pytest.raises(ValueError, match="swap msg type"):
+        wire.decode_swap_request(wire.MSG_GET_SCORE, payload)
+
+
+def test_reply_version_roundtrip():
+    t, payload = _frame_parts(wire.encode_reply_version("v-abc", "swapped"))
+    assert t == wire.MSG_REPLY_VERSION
+    assert wire.decode_reply_version(t, payload) == ("v-abc", "swapped")
+    t, payload = _frame_parts(wire.encode_reply_version("unversioned"))
+    assert wire.decode_reply_version(t, payload) == ("unversioned", "active")
+
+
+def test_reply_version_shed_and_error_raise_like_scores():
+    t, payload = _frame_parts(wire.encode_shed("draining"))
+    with pytest.raises(wire.ShedError, match="draining"):
+        wire.decode_reply_version(t, payload)
+    t, payload = _frame_parts(wire.encode_error("unknown version"))
+    with pytest.raises(RuntimeError, match="unknown version"):
+        wire.decode_reply_version(t, payload)
+    with pytest.raises(ValueError, match="version reply"):
+        wire.decode_reply_version(wire.MSG_REPLY_SCORE, b"\x00" * 8)
+
+
+@pytest.mark.parametrize("frame,decoder", [
+    (wire.encode_version(0.5),
+     lambda t, p: wire.decode_control_request(t, p)),
+    (wire.encode_swap("v-0123abcd4567", 0.25),
+     lambda t, p: wire.decode_swap_request(t, p)),
+    (wire.encode_reply_version("v-0123abcd4567", "swapped"),
+     lambda t, p: wire.decode_reply_version(t, p)),
+])
+def test_fuzz_truncated_rollout_frames_only_raise_value_error(frame,
+                                                              decoder):
+    """MSG_VERSION / MSG_SWAP / MSG_REPLY_VERSION under the same
+    truncation fuzz as every other frame type: proper prefixes decode or
+    raise ValueError, never IndexError/struct.error."""
+    t, payload = frame[4], frame[5:]
+    for cut in range(len(payload)):
+        try:
+            decoder(t, payload[:cut])
+        except ValueError:
+            pass
