@@ -1,0 +1,68 @@
+"""Static-gate and sanitizer cost rows.
+
+Two questions the perf trajectory should answer per PR: what does the
+repro-lint hard gate add to tier-1 wall time (serial vs one thread per
+checker — the ``--jobs 0`` mode tier-1 actually runs), and what does the
+runtime lock sanitizer cost per acquisition when a soak runs under
+``REPRO_SANITIZE=1``.  The lint rows time the real repository tree under
+the checked-in baseline, so they grow with the codebase; the lock rows
+are a microbenchmark of the proxy overhead itself (uncontended
+acquire/release, the common case on the serving hot path).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "scripts", "lint_baseline.txt")
+
+
+def _time_lint(jobs: int):
+    from repro.analysis import runner
+    t0 = time.perf_counter()
+    res = runner.run(ROOT, baseline_path=BASELINE, jobs=jobs)
+    return time.perf_counter() - t0, res
+
+
+def _time_lock_loop(lk, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with lk:
+            pass
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    rows = []
+    serial_s, res = _time_lint(jobs=1)
+    par_s, _ = _time_lint(jobs=0)
+    total = len(res.findings) + len(res.suppressed)
+    rows.append({
+        "name": "lint_gate_serial",
+        "us_per_call": serial_s * 1e6,
+        "derived": f"full tree / {total} finding(s) incl suppressed",
+    })
+    rows.append({
+        "name": "lint_gate_jobs0",
+        "us_per_call": par_s * 1e6,
+        "derived": f"speedup x{serial_s / max(par_s, 1e-9):.2f}",
+    })
+
+    from repro.analysis.sanitizer import Witness, wrap
+    n = 50_000
+    raw_us = _time_lock_loop(threading.Lock(), n) * 1e6
+    san_us = _time_lock_loop(
+        wrap(threading.Lock(), "Bench._lock", Witness()), n) * 1e6
+    rows.append({
+        "name": "lock_acquire_raw",
+        "us_per_call": raw_us,
+        "derived": f"{n} uncontended acquire/release",
+    })
+    rows.append({
+        "name": "lock_acquire_sanitized",
+        "us_per_call": san_us,
+        "derived": f"overhead x{san_us / max(raw_us, 1e-9):.1f}",
+    })
+    return rows

@@ -38,7 +38,7 @@ def main() -> None:
     ap.add_argument("--table", default="all",
                     choices=["all", "1", "2", "e2e", "pipeline_plans",
                              "loadgen", "fabric", "roofline", "trace",
-                             "rollout"])
+                             "rollout", "lint"])
     ap.add_argument("--processes", default="1,2,4", metavar="N,N,...",
                     help="worker-process counts for --table fabric")
     ap.add_argument("--naive", action="store_true",
@@ -80,6 +80,11 @@ def main() -> None:
             tuple(int(x) for x in args.processes.split(",")))
     if args.table in ("all", "roofline"):
         rows += roofline_table.run()
+    if args.table in ("all", "lint"):
+        # Cheap (no world needed): times the repro-lint hard gate over
+        # the real tree plus the sanitizer's per-acquisition overhead.
+        from benchmarks import lint_bench
+        rows += lint_bench.run()
     if args.table == "rollout":
         # Not in "all": it drives a live 2-replica pool with closed-loop
         # client threads for a couple of seconds per condition.

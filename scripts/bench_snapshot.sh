@@ -36,16 +36,21 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --table fabric --processes "$procs" \
     --json "${out}.fabric.tmp"
-# Append the fabric rows to the snapshot (one JSON list per PR).
-python - "$out" "${out}.fabric.tmp" <<'EOF'
+# Lint-gate wall time + sanitizer per-acquisition overhead, so the cost
+# of the static/dynamic gates is tracked PR-over-PR like any other row.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --table lint --json "${out}.lint.tmp"
+# Append the fabric + lint rows to the snapshot (one JSON list per PR).
+python - "$out" "${out}.fabric.tmp" "${out}.lint.tmp" <<'EOF'
 import json, sys
-out, tmp = sys.argv[1], sys.argv[2]
+out, tmps = sys.argv[1], sys.argv[2:]
 with open(out) as f:
     rows = json.load(f)
-with open(tmp) as f:
-    rows += json.load(f)
+for tmp in tmps:
+    with open(tmp) as f:
+        rows += json.load(f)
 with open(out, "w") as f:
     json.dump(rows, f, indent=2, sort_keys=True)
 EOF
-rm -f "${out}.fabric.tmp"
+rm -f "${out}.fabric.tmp" "${out}.lint.tmp"
 echo "snapshot written to $out"

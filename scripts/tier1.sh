@@ -21,9 +21,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 # Hard gate: repro-lint static invariants (lock discipline, wire
-# conformance, telemetry hygiene, ops purity, jit purity). Runs first —
-# it takes ~2s and an invariant violation fails the build before pytest.
-scripts/lint.sh
+# conformance, telemetry hygiene, ops purity, jit purity, deadline/trace
+# dataflow, resource lifecycle). Runs first — it takes ~2s and an
+# invariant violation fails the build before pytest. --strict-stale also
+# fails on baseline entries whose finding no longer fires: a suppression
+# that outlived its code hides the next real finding behind the same key.
+scripts/lint.sh --strict-stale --jobs 0
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"
 

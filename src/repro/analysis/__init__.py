@@ -3,11 +3,17 @@
 The serving stack's correctness rests on a handful of cross-cutting rules
 that no unit test can pin down for *future* code — lock discipline across
 nine threaded modules, wire-protocol conformance for every frame type,
-telemetry hygiene, the ops algebra's value-object purity, and jit/pallas
-trace purity.  This package turns those rules into machine-checked
-findings (``LOCK001`` … ``JIT003``), run as a hard tier-1 gate by
-``scripts/lint.sh``.  See ``docs/invariants.md`` for the rule catalogue
-and the suppression workflow.
+telemetry hygiene, the ops algebra's value-object purity, jit/pallas
+trace purity, and the interprocedural flow contracts (deadline
+propagation ``DL``, trace-context handover ``TRC``, resource lifecycle
+``RES``) built on the shared :mod:`repro.analysis.dataflow` call graph.
+This package turns those rules into machine-checked findings
+(``LOCK001`` … ``RES003``), run as a hard tier-1 gate by
+``scripts/lint.sh``.  The static lock model is additionally
+cross-validated at runtime by :mod:`repro.analysis.sanitizer`
+(``REPRO_SANITIZE=1``), which records real acquisition orders during
+tests and fails on dynamic inversions.  See ``docs/invariants.md`` for
+the rule catalogue and the suppression workflow.
 """
 from repro.analysis.base import Baseline, Finding, Module  # noqa: F401
 from repro.analysis.project import Project                 # noqa: F401

@@ -1,0 +1,356 @@
+"""Interprocedural call-graph + parameter-flow substrate for repro-lint.
+
+The PR-8 checkers were per-function AST pattern matches (plus the lock
+checker's private fixpoint).  The DL/TRC/RES families need to answer
+*flow* questions — "does the deadline this function received reach the
+callee that accepts one?", "is this thread spawn reachable from a request
+entry point?", "does any method of this class ever release the resource
+the constructor acquired?" — so this module factors the resolution
+machinery into one reusable :class:`CallGraph`:
+
+* a :class:`FuncInfo` per function/method across every non-test module,
+  keyed by the same ref format the lock checker uses (``Class.method`` or
+  ``path::func``; nested functions get ``outer.inner`` qualnames);
+* per-function :class:`Scanner` with local alias/type maps (``tracer =
+  telemetry.get_tracer()`` types ``tracer`` as ``Tracer`` via the
+  project's return-annotation table), receiver-type resolution, and
+  **one-level closure capture**: a ``def inner()``/``lambda`` defined in
+  the function body is resolvable as a call/thread target;
+* resolved :class:`CallSite` records including **argument-to-parameter
+  binding** (which callee parameter each argument expression lands on),
+  so a checker can ask "was ``deadline_abs`` bound at this call?";
+* forward/reverse edges and :meth:`CallGraph.reachable` closures.
+
+Everything stays deliberately heuristic in the project.py spirit:
+resolution that cannot be done confidently returns ``None`` and the
+checkers stay silent rather than guessing.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.base import Module, call_name
+from repro.analysis.project import Project
+
+
+def param_names(fn: ast.AST, drop_self: bool = True) -> List[str]:
+    """Positional + keyword-only parameter names of a function, in
+    binding order (``self``/``cls`` dropped for methods)."""
+    args = getattr(fn, "args", None)
+    if args is None:
+        return []
+    names = [a.arg for a in args.posonlyargs + args.args]
+    if drop_self and names and names[0] in ("self", "cls"):
+        names = names[1:]
+    return names + [a.arg for a in args.kwonlyargs]
+
+
+def has_kwargs(fn: ast.AST) -> bool:
+    args = getattr(fn, "args", None)
+    return args is not None and args.kwarg is not None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One function/method in the project call graph."""
+
+    ref: str                      #: "Class.method" or "path::qualname"
+    module: Module
+    cls: Optional[str]            #: enclosing class name, if a method
+    qualname: str
+    fn: ast.AST
+
+    @property
+    def params(self) -> List[str]:
+        return param_names(self.fn, drop_self=self.cls is not None)
+
+
+@dataclasses.dataclass
+class CallSite:
+    """A call statically resolved to a project function, with the
+    argument → parameter binding worked out."""
+
+    call: ast.Call
+    line: int
+    callee: FuncInfo
+    #: callee parameter name -> the argument expression bound to it.
+    #: *args/**kwargs at the call site leave unmatched params unbound
+    #: (checkers must treat splats as "unknown", not "missing").
+    bound: Dict[str, ast.AST]
+    has_splat: bool
+
+
+class Scanner:
+    """Per-function resolution helper: local aliases, receiver types,
+    nested-def ("one-level closure") targets, and call resolution.
+
+    The alias rules mirror the lock checker's ``_MethodScanner`` so both
+    tiers agree on what is resolvable:
+
+    * ``x = ClassName(...)``                → ``x: ClassName``
+    * ``x = get_tracer()``                  → via return annotations
+    * ``x = self.attr``                     → via the class attr-type map
+    * ``def inner(): ...`` / ``f = lambda`` → closure targets
+    """
+
+    def __init__(self, graph: "CallGraph", info: FuncInfo):
+        self.graph = graph
+        self.project = graph.project
+        self.info = info
+        self.cls = info.cls
+        self.local_types: Dict[str, str] = {}
+        self.local_defs: Dict[str, ast.AST] = {}
+        #: every name bound in this function (params, assigns, for/with
+        #: targets) — a receiver NOT in here is likely a module alias
+        self.bound_names: Set[str] = set(param_names(info.fn,
+                                                     drop_self=False))
+        self._collect_locals()
+
+    def _collect_locals(self) -> None:
+        for node in ast.walk(self.info.fn):
+            for tgt in _binding_targets(node):
+                self.bound_names.add(tgt)
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                if isinstance(node.value, ast.Lambda):
+                    self.local_defs[name] = node.value
+                    continue
+                t = self._value_type(node.value)
+                if t:
+                    self.local_types[name] = t
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not self.info.fn:
+                self.local_defs.setdefault(node.name, node)
+
+    def _value_type(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            name = (call_name(node) or "").split(".")[-1]
+            if name in self.project.classes:
+                return name
+            if name in self.project.func_return_types:
+                return self.project.func_return_types[name]
+        elif (isinstance(node, ast.Attribute)
+              and isinstance(node.value, ast.Name)
+              and node.value.id == "self" and self.cls):
+            return self.project.attr_type(self.cls, node.attr)
+        return None
+
+    def receiver_type(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            if node.id == "self":
+                return self.cls
+            return self.local_types.get(node.id)
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and self.cls):
+            return self.project.attr_type(self.cls, node.attr)
+        if isinstance(node, ast.Call):
+            return self._value_type(node)
+        return None
+
+    def resolve_target(self, node: ast.AST) -> Optional[FuncInfo]:
+        """Resolve a *callable expression* (not a call): ``self._meth``,
+        a local nested def/lambda, a module function name, or a
+        ``module.func`` attribute chain (resolved by the unique-name
+        rule when the receiver is not a typed object — how ``wire.
+        encode_rank`` style cross-module calls become graph edges).
+        This is also how thread/executor spawn targets are resolved."""
+        if isinstance(node, ast.Name):
+            nested = self.local_defs.get(node.id)
+            if nested is not None:
+                return self.graph.info_for_node(nested) or FuncInfo(
+                    ref=f"{self.info.ref}.<local {node.id}>",
+                    module=self.info.module, cls=None,
+                    qualname=node.id, fn=nested)
+            fn = self.project.functions.get(
+                (self.info.module.path, node.id))
+            if fn is not None:
+                return self.graph.lookup(
+                    f"{self.info.module.path}::{node.id}")
+            return self.graph.unique_function(node.id)
+        if isinstance(node, ast.Lambda):
+            return FuncInfo(ref=f"{self.info.ref}.<lambda>",
+                            module=self.info.module, cls=None,
+                            qualname="<lambda>", fn=node)
+        if isinstance(node, ast.Attribute):
+            recv = self.receiver_type(node.value)
+            got = self.project.resolve_method(recv, node.attr)
+            if got:
+                return self.graph.lookup(f"{got[0]}.{node.attr}") \
+                    or FuncInfo(ref=f"{got[0]}.{node.attr}",
+                                module=self.info.module, cls=got[0],
+                                qualname=node.attr, fn=got[1])
+            if recv is None and isinstance(node.value, ast.Name) \
+                    and node.value.id != "self" \
+                    and node.value.id not in self.bound_names \
+                    and not node.attr.startswith("_"):
+                # module-qualified call: unique top-level function name
+                return self.graph.unique_function(node.attr)
+        return None
+
+    def resolve_call(self, call: ast.Call) -> Optional[CallSite]:
+        callee = self.resolve_target(call.func)
+        if callee is None:
+            return None
+        return CallSite(call=call, line=call.lineno, callee=callee,
+                        bound=bind_arguments(call, callee),
+                        has_splat=_has_splat(call))
+
+
+def _has_splat(call: ast.Call) -> bool:
+    return (any(isinstance(a, ast.Starred) for a in call.args)
+            or any(k.arg is None for k in call.keywords))
+
+
+def _binding_targets(node: ast.AST):
+    """Bare names bound by an assignment/for/with statement."""
+    targets: List[ast.AST] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign, ast.For)):
+        targets = [node.target]
+    elif isinstance(node, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in node.items
+                   if i.optional_vars is not None]
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, ast.Name):
+                yield sub.id
+
+
+def bind_arguments(call: ast.Call, callee: FuncInfo) -> Dict[str, ast.AST]:
+    """Map call arguments onto callee parameter names (best effort:
+    ``*args``/``**kwargs`` splats stop positional matching)."""
+    params = callee.params
+    bound: Dict[str, ast.AST] = {}
+    pos = 0
+    for arg in call.args:
+        if isinstance(arg, ast.Starred):
+            break                    # positions past a splat are unknown
+        if pos < len(params):
+            bound[params[pos]] = arg
+        pos += 1
+    for kw in call.keywords:
+        if kw.arg is not None:
+            bound[kw.arg] = kw.value
+    return bound
+
+
+class CallGraph:
+    """All resolvable call edges across the project's non-test modules.
+
+    Built once per lint run and shared by the DL/TRC/RES checkers; the
+    construction cost is one AST pass per function plus a reverse-edge
+    index, comparable to the lock checker's phase 1.
+    """
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.functions: Dict[str, FuncInfo] = {}
+        self._by_node: Dict[int, FuncInfo] = {}
+        self.call_sites: Dict[str, List[CallSite]] = {}
+        self.callers: Dict[str, Set[str]] = {}
+        #: top-level function name -> refs (for the unique-name rule on
+        #: module-qualified calls like ``wire.encode_rank(...)``)
+        self._func_name_index: Dict[str, List[str]] = {}
+        for mod, qualname, cls, fn in self._each_method():
+            ref = qualname if cls else f"{mod.path}::{qualname}"
+            info = FuncInfo(ref=ref, module=mod, cls=cls,
+                            qualname=qualname, fn=fn)
+            # first definition wins, matching resolve_method's behavior
+            self.functions.setdefault(ref, info)
+            self._by_node[id(fn)] = self.functions[ref]
+            if cls is None and "." not in qualname:
+                self._func_name_index.setdefault(
+                    qualname, []).append(ref)
+        for info in list(self.functions.values()):
+            scanner = Scanner(self, info)
+            sites: List[CallSite] = []
+            for node in ast.walk(info.fn):
+                if isinstance(node, ast.Call):
+                    site = scanner.resolve_call(node)
+                    if site is not None:
+                        sites.append(site)
+                        self.callers.setdefault(
+                            site.callee.ref, set()).add(info.ref)
+            self.call_sites[info.ref] = sites
+
+    def _each_method(self):
+        for mod in sorted(self.project.modules.values(),
+                          key=lambda m: m.path):
+            if mod.path.startswith("tests/") or "/tests/" in mod.path:
+                continue
+            if "/analysis/" in mod.path:
+                continue       # the linter does not lint itself
+            for qualname, cls, fn in mod.iter_scoped_functions():
+                yield mod, qualname, cls, fn
+
+    def lookup(self, ref: str) -> Optional[FuncInfo]:
+        return self.functions.get(ref)
+
+    def unique_function(self, name: str) -> Optional[FuncInfo]:
+        """The single top-level function with this name, if exactly one
+        module defines it (mirrors resolve_method's unique-name rule)."""
+        refs = self._func_name_index.get(name, [])
+        if len(refs) == 1:
+            return self.functions[refs[0]]
+        return None
+
+    def info_for_node(self, fn: ast.AST) -> Optional[FuncInfo]:
+        return self._by_node.get(id(fn))
+
+    def scanner(self, info: FuncInfo) -> Scanner:
+        return Scanner(self, info)
+
+    def reachable(self, roots: Iterable[str]) -> Set[str]:
+        """Refs reachable from ``roots`` through resolved call edges
+        (roots included)."""
+        seen: Set[str] = set()
+        stack = [r for r in roots if r in self.functions]
+        while stack:
+            ref = stack.pop()
+            if ref in seen:
+                continue
+            seen.add(ref)
+            for site in self.call_sites.get(ref, ()):
+                if site.callee.ref not in seen:
+                    stack.append(site.callee.ref)
+        return seen
+
+    # ------------------------------------------------- flow questions --
+
+    def expr_mentions(self, expr: ast.AST, name: str) -> bool:
+        """Does ``expr`` reference local/param ``name`` anywhere?"""
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id == name:
+                return True
+        return False
+
+
+def each_class(project: Project):
+    """Non-test, non-analysis classes — the RES/TRC per-class iteration."""
+    for name in sorted(project.classes):
+        cls = project.classes[name]
+        path = cls.module.path
+        if path.startswith("tests/") or "/tests/" in path:
+            continue
+        if "/analysis/" in path:
+            continue
+        yield cls
+
+
+def build(project: Project) -> CallGraph:
+    """Build (or fetch the memoized) call graph for ``project``.
+
+    The three dataflow checkers run in one lint invocation over one
+    Project; memoizing on the project instance keeps the gate at one
+    graph construction, and keeps the checkers independently callable
+    (each self-tests against tiny fixture projects)."""
+    graph = getattr(project, "_dataflow_graph", None)
+    if graph is None or graph.project is not project:
+        graph = CallGraph(project)
+        project._dataflow_graph = graph
+    return graph

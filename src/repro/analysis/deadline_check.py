@@ -1,0 +1,163 @@
+"""DL — deadline-propagation checker (interprocedural).
+
+The serving stack's deadline contract (see ``docs/invariants.md``): the
+wire deadline becomes an absolute ``deadline_abs`` at frame read, and from
+there it must *flow* — through engines, plans, pools — down to whatever
+can still shed the request (the batcher's dequeue drop, admission, the
+client's retry loop).  The repo's worst regressions (PR 5, PR 6) were
+exactly this flow silently breaking at one call site.  Three rules:
+
+* **DL001** — a function that *receives* a ``deadline_abs`` parameter must
+  thread it to every resolvable callee that *accepts* one.  An unbound
+  ``deadline_abs`` parameter at such a call site is a dropped deadline:
+  the callee will happily queue work the caller already promised to bound.
+  (Explicitly binding it to something else — e.g. a recomputed per-item
+  deadline — is a conscious decision and stays silent; splat calls are
+  "unknown", not "missing".)
+* **DL002** — a class advertising ``supports_deadline = True`` promises
+  the server that passing ``deadline_abs`` changes behavior *downstream*
+  (late work is dropped while queued, not just rejected at the door).  A
+  handler entry method that receives ``deadline_abs`` but only ever
+  *compares* it — never passes it onward as a call argument — silently
+  reduces the contract to an arrival check: the defect class behind the
+  PipelineEngine.rank_batch regression this checker was built on.
+* **DL003** — a shed must be countable: any function that raises
+  ``ShedError`` must also increment a shed metric (a registry ``.inc``
+  whose metric name mentions ``shed`` or ``expired``) so load-shedding
+  shows up in MSG_STATS instead of disappearing into client retries.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.base import Finding, call_name, walk_in_scope
+from repro.analysis.dataflow import build, each_class
+from repro.analysis.project import Project
+
+PARAM = "deadline_abs"
+
+#: Handler entry methods covered by the supports_deadline contract —
+#: what servers and pools dispatch to (see service._serve_connection).
+_ENTRY_METHODS = {"get_score", "get_scores", "rank", "rank_batch",
+                  "rank_many", "submit", "submit_many"}
+
+_SHED_WORDS = ("shed", "expired")
+
+
+def _is_shed_raise(node: ast.Raise) -> bool:
+    exc = node.exc
+    if isinstance(exc, ast.Call):
+        name = call_name(exc) or ""
+        return name.split(".")[-1] == "ShedError"
+    return False
+
+
+def _inc_metric_name(node: ast.Call) -> Optional[str]:
+    """The metric-name literal of a ``registry.inc("...")`` call."""
+    if not (isinstance(node.func, ast.Attribute)
+            and node.func.attr == "inc"):
+        return None
+    if node.args and isinstance(node.args[0], ast.Constant) \
+            and isinstance(node.args[0].value, str):
+        return node.args[0].value
+    return None
+
+
+def check(project: Project) -> List[Finding]:
+    graph = build(project)
+    findings: List[Finding] = []
+
+    # ------------------------------------------------------------ DL001
+    for ref, info in sorted(graph.functions.items()):
+        if PARAM not in set(param_list(info)):
+            continue
+        for site in graph.call_sites.get(ref, ()):
+            if PARAM not in site.callee.params:
+                continue
+            if site.has_splat or PARAM in site.bound:
+                continue
+            findings.append(Finding(
+                code="DL001", path=info.module.path, line=site.line,
+                scope=info.qualname,
+                message=f"receives {PARAM} but calls {site.callee.ref} "
+                        f"(which accepts {PARAM}) without passing it — "
+                        f"the deadline stops propagating here"))
+
+    # ------------------------------------------------------------ DL002
+    for cls in each_class(project):
+        if not _supports_deadline(cls.node):
+            continue
+        for name, fn in sorted(cls.methods.items()):
+            if name not in _ENTRY_METHODS:
+                continue
+            if PARAM not in param_list_fn(fn):
+                continue
+            if _param_flows_out(fn):
+                continue
+            findings.append(Finding(
+                code="DL002", path=cls.module.path, line=fn.lineno,
+                scope=f"{cls.name}.{name}",
+                message=f"{cls.name} advertises supports_deadline but "
+                        f"{name} only compares {PARAM} — it never flows "
+                        f"into a callee, so queued work outlives the "
+                        f"deadline (arrival-check-only contract)"))
+
+    # ------------------------------------------------------------ DL003
+    for ref, info in sorted(graph.functions.items()):
+        sheds = [n for n in walk_in_scope(info.fn)
+                 if isinstance(n, ast.Raise) and _is_shed_raise(n)]
+        if not sheds:
+            continue
+        metered = any(
+            any(w in (_inc_metric_name(n) or "") for w in _SHED_WORDS)
+            for n in walk_in_scope(info.fn) if isinstance(n, ast.Call))
+        if metered:
+            continue
+        findings.append(Finding(
+            code="DL003", path=info.module.path, line=sheds[0].lineno,
+            scope=info.qualname,
+            message="raises ShedError without incrementing a shed metric "
+                    "(inc(\"...shed/expired...\")) — this shed path is "
+                    "invisible in MSG_STATS"))
+    return findings
+
+
+def param_list(info) -> List[str]:
+    return info.params
+
+
+def param_list_fn(fn: ast.AST) -> List[str]:
+    from repro.analysis.dataflow import param_names
+    return param_names(fn)
+
+
+def _supports_deadline(node: ast.ClassDef) -> bool:
+    for stmt in node.body:
+        target = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            target, value = stmt.targets[0], stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            target, value = stmt.target, stmt.value
+        else:
+            continue
+        if isinstance(target, ast.Name) \
+                and target.id == "supports_deadline" \
+                and isinstance(value, ast.Constant) and value.value is True:
+            return True
+    return False
+
+
+def _param_flows_out(fn: ast.AST) -> bool:
+    """Does ``deadline_abs`` appear as a call argument (positionally, by
+    keyword, or inside an argument expression) anywhere in the body?
+    Comparisons/arithmetic alone do not count as flowing out."""
+    for node in walk_in_scope(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        args = list(node.args) + [k.value for k in node.keywords]
+        for arg in args:
+            for sub in ast.walk(arg):
+                if isinstance(sub, ast.Name) and sub.id == PARAM:
+                    return True
+    return False

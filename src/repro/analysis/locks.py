@@ -401,3 +401,16 @@ class LockChecker:
 
 def check(project: Project) -> List[Finding]:
     return LockChecker(project).check()
+
+
+def static_edges(project: Project
+                 ) -> Dict[Tuple[str, str], Tuple[str, int, str]]:
+    """The static acquisition-order graph: ``(held, acquired) -> (path,
+    line, scope)`` of the first site that acquires the second lock while
+    holding the first.  This is the model the runtime sanitizer
+    cross-validates: a dynamically witnessed reversal of an edge is a real
+    inversion; a static edge no test ever witnesses is stale model debt
+    (see ``repro.analysis.sanitizer``)."""
+    checker = LockChecker(project)
+    checker.check()
+    return dict(checker.edges)

@@ -1,0 +1,265 @@
+"""RES — resource-lifecycle checker.
+
+The serving stack owns a lot of OS-backed state — listener sockets,
+worker threads, batcher loops, temp directories, child processes — and
+every leak class here has bitten a long-lived serving process somewhere:
+an unjoined reader thread outliving its worker, a batcher thread spinning
+after its pool was dropped, a tempdir surviving a failed publish.  Three
+rules:
+
+* **RES001** — a *local* resource acquisition (``tempfile.mkdtemp``,
+  ``socket.socket``/``create_connection``, ``subprocess.Popen``) must be
+  released on all paths: used as a ``with`` context, released inside a
+  ``finally``, or allowed to escape the function (returned, stored on
+  ``self``, passed onward — then the owner is responsible and RES002
+  takes over).
+* **RES002** — a resource the *class* owns (``self.x = Thread(...)`` /
+  ``MicroBatcher(...)`` / ``Client(...)`` / ``Popen(...)`` — any project
+  class defining ``close``/``stop``) must be released by some method of
+  the class (``close``/``stop``/``join``/``terminate``…, directly or by
+  iterating the owning list attribute).  A class that starts a thread it
+  never joins leaks one OS thread per instance, forever.
+* **RES003** — a class that defines ``close``/``stop`` must be usable as
+  a context manager (``__enter__``/``__exit__``, possibly inherited):
+  release-on-exception at every call site is exactly what ``with`` is
+  for, and half the historical leaks were callers forgetting the
+  ``try/finally`` that a context manager would have written for them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import Finding, call_name, walk_in_scope
+from repro.analysis.dataflow import each_class
+from repro.analysis.project import ClassInfo, Project
+
+#: Local acquisitions: call name -> what was acquired.
+_ACQUIRERS = {
+    "tempfile.mkdtemp": "temp directory",
+    "socket.socket": "socket",
+    "socket.create_connection": "socket",
+    "subprocess.Popen": "child process",
+}
+
+#: Methods that count as releasing a resource.
+_RELEASE_METHODS = {"close", "stop", "join", "terminate", "kill", "wait",
+                    "shutdown", "unlink", "cleanup", "communicate",
+                    "release"}
+#: Functions that release when passed the resource as an argument.
+_RELEASE_FUNCS = {"shutil.rmtree", "os.rmdir", "os.removedirs"}
+
+#: Constructor names (last dotted component) that always denote an
+#: OS-backed resource, regardless of project knowledge.
+_RESOURCE_CTORS = {"Thread", "Popen"}
+
+_LIFECYCLE_METHODS = {"close", "stop"}
+
+
+def _acquired_kind(value: ast.AST) -> Optional[str]:
+    if not isinstance(value, ast.Call):
+        return None
+    name = call_name(value) or ""
+    if name in _ACQUIRERS:
+        return _ACQUIRERS[name]
+    last = name.split(".")[-1]
+    if last == "Popen":
+        return "child process"
+    if last == "mkdtemp":
+        return "temp directory"
+    return None
+
+
+def _check_local_acquisitions(cls_or_mod_fns, project: Project,
+                              findings: List[Finding]) -> None:
+    for mod, qualname, fn in cls_or_mod_fns:
+        for node in walk_in_scope(fn):
+            if not (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            kind = _acquired_kind(node.value)
+            if kind is None:
+                continue
+            name = node.targets[0].id
+            if _local_is_released_or_escapes(fn, name, node):
+                continue
+            findings.append(Finding(
+                code="RES001", path=mod.path, line=node.lineno,
+                scope=qualname,
+                message=f"{kind} acquired into local {name!r} is neither "
+                        f"closed on all paths (with/finally) nor handed "
+                        f"to an owner — it leaks on the exception path"))
+
+
+def _local_is_released_or_escapes(fn: ast.AST, name: str,
+                                  acq: ast.Assign) -> bool:
+    for node in walk_in_scope(fn):
+        # with name: / with wrap(name):
+        if isinstance(node, ast.withitem):
+            for sub in ast.walk(node.context_expr):
+                if isinstance(sub, ast.Name) and sub.id == name:
+                    return True
+        # escapes: return name / yield name / self.x = name
+        if isinstance(node, (ast.Return, ast.Yield)) \
+                and node.value is not None:
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Name) and sub.id == name:
+                    return True
+        if isinstance(node, ast.Assign) and node is not acq:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute):
+                    return True   # stored on an object: owner's problem
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Name) and sub.id == name:
+                    return True   # aliased/wrapped: stop tracking
+        if isinstance(node, ast.Call):
+            cn = call_name(node) or ""
+            # release call on the resource itself
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _RELEASE_METHODS:
+                recv = node.func.value
+                if isinstance(recv, ast.Name) and recv.id == name:
+                    return True
+            # passed as an argument (rmtree(d), container.append(sock),
+            # Thread(args=(sock,)) — ownership moves)
+            args = list(node.args) + [k.value for k in node.keywords]
+            for arg in args:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name) and sub.id == name:
+                        return True
+    return False
+
+
+def _owned_resources(cls: ClassInfo,
+                     project: Project) -> Dict[str, Set[int]]:
+    """attr -> assignment lines where the class constructs a resource it
+    therefore owns (Thread/Popen, or a project class defining
+    close/stop)."""
+    owned: Dict[str, Set[int]] = {}
+    for fn in cls.methods.values():
+        for node in ast.walk(fn):
+            target = value = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                target, value = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign):
+                target, value = node.target, node.value
+            if not (isinstance(target, ast.Attribute)
+                    and isinstance(target.value, ast.Name)
+                    and target.value.id == "self"):
+                continue
+            ctor = _resource_ctor_name(value, project)
+            if ctor is None:
+                continue
+            owned.setdefault(target.attr, set()).add(node.lineno)
+    return owned
+
+
+def _resource_ctor_name(value: Optional[ast.AST],
+                        project: Project) -> Optional[str]:
+    calls: List[ast.Call] = []
+    if isinstance(value, ast.Call):
+        calls = [value]
+    elif isinstance(value, ast.List):
+        calls = [e for e in value.elts if isinstance(e, ast.Call)]
+    elif isinstance(value, ast.ListComp) \
+            and isinstance(value.elt, ast.Call):
+        calls = [value.elt]
+    for c in calls:
+        last = (call_name(c) or "").split(".")[-1]
+        if last in _RESOURCE_CTORS:
+            return last
+        target_cls = project.classes.get(last)
+        if target_cls is not None and any(
+                m in target_cls.methods for m in _LIFECYCLE_METHODS):
+            return last
+    return None
+
+
+def _class_releases(cls: ClassInfo, attr: str) -> bool:
+    """Does any method of the class release ``self.attr`` — directly
+    (``self.attr.close()``), through a loop over the attribute, or by
+    passing it to a release function?"""
+    for fn in cls.methods.values():
+        loop_aliases: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.For):
+                # for x in self.attr: x.join()
+                it = node.iter
+                mentions = any(
+                    isinstance(s, ast.Attribute) and s.attr == attr
+                    and isinstance(s.value, ast.Name)
+                    and s.value.id == "self"
+                    for s in ast.walk(it))
+                if mentions:
+                    for sub in ast.walk(node.target):
+                        if isinstance(sub, ast.Name):
+                            loop_aliases.add(sub.id)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _RELEASE_METHODS:
+                recv = node.func.value
+                if isinstance(recv, ast.Attribute) \
+                        and recv.attr == attr \
+                        and isinstance(recv.value, ast.Name) \
+                        and recv.value.id == "self":
+                    return True
+                if isinstance(recv, ast.Name) and recv.id in loop_aliases:
+                    return True
+            cn = call_name(node) or ""
+            if cn in _RELEASE_FUNCS:
+                for arg in node.args:
+                    if any(isinstance(s, ast.Attribute) and s.attr == attr
+                           for s in ast.walk(arg)):
+                        return True
+    return False
+
+
+def _has_context_manager(cls: ClassInfo, project: Project) -> bool:
+    for c in project.class_and_bases(cls.name):
+        if "__enter__" in c.methods and "__exit__" in c.methods:
+            return True
+    # unresolvable external bases (e.g. contextlib mixins): stay silent
+    return any(project.classes.get(b) is None for b in cls.bases)
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # RES001 over every function/method (module-level and class-level)
+    fns = []
+    for path in sorted(project.modules):
+        mod = project.modules[path]
+        if path.startswith("tests/") or "/tests/" in path \
+                or "/analysis/" in path:
+            continue
+        for qualname, cls, fn in mod.iter_scoped_functions():
+            fns.append((mod, qualname, fn))
+    _check_local_acquisitions(fns, project, findings)
+
+    for cls in each_class(project):
+        # ------------------------------------------------------ RES002
+        for attr, lines in sorted(_owned_resources(cls, project).items()):
+            released = any(_class_releases(c, attr)
+                           for c in project.class_and_bases(cls.name))
+            if released:
+                continue
+            findings.append(Finding(
+                code="RES002", path=cls.module.path,
+                line=min(lines), scope=cls.name,
+                message=f"{cls.name} constructs self.{attr} but no "
+                        f"method ever releases it (close/stop/join/"
+                        f"terminate) — each instance leaks it for the "
+                        f"process lifetime"))
+        # ------------------------------------------------------ RES003
+        if any(m in cls.methods for m in _LIFECYCLE_METHODS) \
+                and not _has_context_manager(cls, project):
+            findings.append(Finding(
+                code="RES003", path=cls.module.path,
+                line=cls.node.lineno, scope=cls.name,
+                message=f"{cls.name} defines close/stop but is not a "
+                        f"context manager — add __enter__/__exit__ so "
+                        f"callers get release-on-exception via with"))
+    return findings

@@ -3,22 +3,38 @@
 Usage (what ``scripts/lint.sh`` runs)::
 
     PYTHONPATH=src python -m repro.analysis --root . \\
-        --baseline scripts/lint_baseline.txt
+        --baseline scripts/lint_baseline.txt --strict-stale
 
 Exit status is 0 when every finding is suppressed (inline allow or
 baseline entry) and 1 otherwise, so the tier-1 script can use it as a hard
 gate.  Stale baseline entries — suppressions whose finding no longer fires
-— are reported as warnings but do not fail the gate.
+— are warnings by default and failures under ``--strict-stale`` (tier-1
+runs strict: a suppression that outlived its finding is debt that hides
+the next real one behind an identical key).
+
+``--changed-only`` scopes *reporting* to files touched in the working
+tree (vs HEAD, plus untracked): the analysis still runs over the full
+tree — interprocedural checks need every caller — but findings outside
+the diff are dropped, which is what a pre-commit hook wants.  Stale
+warnings are suppressed in this mode (a filtered finding set cannot
+validate a full-tree baseline).
+
+``--jobs N`` runs the checkers concurrently (0 = one thread per checker).
+The shared dataflow substrate is built once, before dispatch, so the
+workers only read it.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import subprocess
 import sys
-from typing import Callable, Dict, List, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Set
 
-from repro.analysis import (jit_check, locks, ops_check, telemetry_check,
-                            wires)
+from repro.analysis import (dataflow, deadline_check, jit_check, locks,
+                            ops_check, resource_check, telemetry_check,
+                            trace_check, wires)
 from repro.analysis.base import Baseline, Finding
 from repro.analysis.project import Project
 
@@ -28,6 +44,9 @@ CHECKERS: Dict[str, Callable[[Project], List[Finding]]] = {
     "TEL": telemetry_check.check,
     "OPS": ops_check.check,
     "JIT": jit_check.check,
+    "DL": deadline_check.check,
+    "TRC": trace_check.check,
+    "RES": resource_check.check,
 }
 
 
@@ -42,15 +61,48 @@ class LintResult:
         return not self.findings
 
 
+def changed_paths(root: str) -> Set[str]:
+    """Repo-relative paths changed vs HEAD (tracked) plus untracked files.
+    Empty when git is unavailable — callers then see zero findings, which
+    is the right pre-commit answer for 'nothing changed'."""
+    out: Set[str] = set()
+    for args in (["diff", "--name-only", "HEAD"],
+                 ["ls-files", "--others", "--exclude-standard"]):
+        try:
+            res = subprocess.run(["git", "-C", root] + args,
+                                 capture_output=True, text=True,
+                                 timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            continue
+        if res.returncode == 0:
+            out.update(line.strip() for line in res.stdout.splitlines()
+                       if line.strip())
+    return out
+
+
 def run(root: str, baseline_path: Optional[str] = None,
         checks: Optional[List[str]] = None,
-        project: Optional[Project] = None) -> LintResult:
+        project: Optional[Project] = None,
+        jobs: int = 1, changed_only: bool = False) -> LintResult:
     project = project if project is not None else Project(root)
     baseline = (Baseline.load(baseline_path) if baseline_path
                 else Baseline())
+    names = checks or sorted(CHECKERS)
     raw: List[Finding] = []
-    for name in (checks or sorted(CHECKERS)):
-        raw.extend(CHECKERS[name](project))
+    if jobs == 1 or len(names) == 1:
+        for name in names:
+            raw.extend(CHECKERS[name](project))
+    else:
+        # Workers share one read-only substrate: build it before dispatch
+        # so no two checkers race the memoization.
+        dataflow.build(project)
+        workers = len(names) if jobs <= 0 else min(jobs, len(names))
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            for result in ex.map(lambda n: CHECKERS[n](project), names):
+                raw.extend(result)
+    if changed_only:
+        scope = changed_paths(root)
+        raw = [f for f in raw if f.path in scope]
     raw.sort(key=lambda f: (f.path, f.line, f.code))
     findings: List[Finding] = []
     suppressed: List[Finding] = []
@@ -62,8 +114,9 @@ def run(root: str, baseline_path: Optional[str] = None,
             suppressed.append(f)
         else:
             findings.append(f)
+    stale = [] if changed_only else baseline.stale_entries()
     return LintResult(findings=findings, suppressed=suppressed,
-                      stale_baseline=baseline.stale_entries())
+                      stale_baseline=stale)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -79,6 +132,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                              f"(default: all of {','.join(sorted(CHECKERS))})")
     parser.add_argument("--show-suppressed", action="store_true",
                         help="also print suppressed findings")
+    parser.add_argument("--changed-only", action="store_true",
+                        help="report findings only in files changed vs "
+                             "HEAD (plus untracked); analysis still "
+                             "covers the full tree")
+    parser.add_argument("--jobs", type=int, default=1, metavar="N",
+                        help="run checkers on N threads (0 = one per "
+                             "checker; default 1 = serial)")
+    parser.add_argument("--strict-stale", action="store_true",
+                        help="fail (exit 1) on stale baseline entries "
+                             "instead of warning")
     args = parser.parse_args(argv)
 
     checks = None
@@ -91,16 +154,25 @@ def main(argv: Optional[List[str]] = None) -> int:
                   file=sys.stderr)
             return 2
 
-    result = run(args.root, baseline_path=args.baseline, checks=checks)
+    result = run(args.root, baseline_path=args.baseline, checks=checks,
+                 jobs=args.jobs, changed_only=args.changed_only)
     for f in result.findings:
         print(f.render())
     if args.show_suppressed:
         for f in result.suppressed:
             print(f"(suppressed) {f.render()}")
-    for entry in result.stale_baseline:
-        print(f"repro-lint: warning: stale baseline entry "
+    # A subset run can't see every finding, so its stale report would be
+    # noise; only a full-checker run judges the baseline.
+    stale = result.stale_baseline if checks is None else []
+    for entry in stale:
+        level = "error" if args.strict_stale else "warning"
+        print(f"repro-lint: {level}: stale baseline entry "
               f"(finding no longer fires): {entry.code} "
               f"{entry.path}::{entry.scope}", file=sys.stderr)
     n, s = len(result.findings), len(result.suppressed)
     print(f"repro-lint: {n} finding(s), {s} suppressed", file=sys.stderr)
-    return 0 if result.ok else 1
+    if result.findings:
+        return 1
+    if args.strict_stale and stale:
+        return 1
+    return 0

@@ -1,0 +1,425 @@
+"""Runtime lock sanitizer — the dynamic half of the LOCK checks.
+
+The static checker (``repro.analysis.locks``) reasons about every path the
+AST admits; this module watches what the test suite actually *does*.  Under
+``REPRO_SANITIZE=1`` (see the root ``conftest.py``) the ``threading.Lock``
+/ ``threading.RLock`` factories are patched so every lock **created by repo
+code** is wrapped in a recording proxy:
+
+* each acquisition while other sanitized locks are held witnesses an
+  ordering edge ``(held, acquired)`` — if the reversed edge was witnessed
+  earlier (by any thread), that is a **dynamic lock-order inversion**: two
+  schedules that deadlock against each other actually ran;
+* blocking primitives (``time.sleep``, ``Event.wait``, ``Future.result``,
+  ``Thread.join``) called from repo code while a sanitized lock is held are
+  recorded as **blocking-under-lock** events — the runtime twin of LOCK001;
+* after the run, the witnessed graph is cross-checked against the static
+  edge model (``locks.static_edges``): a static edge some test actually
+  drove is **confirmed** (the model describes live behavior), one that no
+  test ever witnessed is reported as **stale model debt** — either dead
+  code or a coverage hole, both worth knowing.
+
+Lock identity mirrors the static checker's (``Owner.attr`` from the
+``self.attr = threading.Lock()`` assignment, ``Owner.attr[]`` for lock
+lists), so the two graphs join on equal keys.  Locks whose creation site
+the identity map does not know fall back to ``path:line`` — they still
+participate in inversion detection, just not in the cross-check.
+
+Everything here is inert unless ``install()`` runs; the proxies add two
+dict operations per uncontended acquire, so the sanitized suite runs at
+near-native speed (measured by ``benchmarks/run.py --table lint``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import sys
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+#: Raw factories, captured at import time so the sanitizer's own internal
+#: locking never recurses through the patched ones.
+_RAW_LOCK = threading.Lock
+_RAW_RLOCK = threading.RLock
+
+ENV_FLAG = "REPRO_SANITIZE"
+
+
+# ------------------------------------------------------------- identity --
+
+def build_identity_map(root: str) -> Dict[Tuple[str, int], str]:
+    """(relpath, lineno of the ``threading.Lock()`` call) -> static lock
+    identity, for every lock-attribute assignment in repo classes.  Walks
+    the source directly (no ``Project`` import) so it is cheap enough to
+    run at pytest startup."""
+    identities: Dict[Tuple[str, int], str] = {}
+    src = os.path.join(root, "src")
+    for dirpath, dirnames, filenames in os.walk(src):
+        dirnames[:] = [d for d in dirnames
+                       if d not in ("__pycache__", "tests")]
+        for fname in filenames:
+            if not fname.endswith(".py"):
+                continue
+            abspath = os.path.join(dirpath, fname)
+            rel = os.path.relpath(abspath, root).replace(os.sep, "/")
+            if "/analysis/" in rel:
+                continue
+            try:
+                with open(abspath, "r", encoding="utf-8") as f:
+                    tree = ast.parse(f.read(), filename=rel)
+            except (OSError, SyntaxError):
+                continue
+            for cls in ast.walk(tree):
+                if not isinstance(cls, ast.ClassDef):
+                    continue
+                for node in ast.walk(cls):
+                    target = value = None
+                    if isinstance(node, ast.Assign) \
+                            and len(node.targets) == 1:
+                        target, value = node.targets[0], node.value
+                    elif isinstance(node, ast.AnnAssign):
+                        target, value = node.target, node.value
+                    if not (isinstance(target, ast.Attribute)
+                            and isinstance(target.value, ast.Name)
+                            and target.value.id == "self"
+                            and value is not None):
+                        continue
+                    for call, suffix in _lock_ctor_calls(value):
+                        identities[(rel, call.lineno)] = \
+                            f"{cls.name}.{target.attr}{suffix}"
+    return identities
+
+
+def _lock_ctor_calls(value: ast.AST):
+    """Yield (Call, identity-suffix) for every threading.Lock/RLock
+    constructor inside a lock-attribute assignment value."""
+    def is_ctor(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("Lock", "RLock")
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "threading")
+
+    if is_ctor(value):
+        yield value, ""
+    elif isinstance(value, ast.List):
+        for e in value.elts:
+            if is_ctor(e):
+                yield e, "[]"
+    elif isinstance(value, ast.ListComp) and is_ctor(value.elt):
+        yield value.elt, "[]"
+
+
+# -------------------------------------------------------------- witness --
+
+@dataclasses.dataclass
+class Violation:
+    kind: str                 #: "inversion" | "blocking"
+    message: str
+    site: str                 #: "path:line" where it happened
+
+    def render(self) -> str:
+        return f"SANITIZE[{self.kind}] {self.site} {self.message}"
+
+
+class Witness:
+    """Process-wide recorder shared by every sanitized lock."""
+
+    def __init__(self):
+        self._mu = _RAW_LOCK()
+        self._tls = threading.local()
+        #: (held, acquired) -> "path:line" of the first witnessed site
+        self.edges: Dict[Tuple[str, str], str] = {}
+        self.acquisitions = 0
+        self.inversions: List[Violation] = []
+        self.blocking: List[Violation] = []
+
+    # Held stack of the CURRENT thread (identities, acquisition order,
+    # duplicated for reentrant holds).
+    def _held(self) -> List[str]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    def held_now(self) -> List[str]:
+        return list(self._held())
+
+    def on_acquired(self, identity: str, site: str) -> None:
+        held = self._held()
+        with self._mu:
+            self.acquisitions += 1
+            for h in held:
+                if h == identity:
+                    continue
+                self.edges.setdefault((h, identity), site)
+                rev = self.edges.get((identity, h))
+                if rev is not None:
+                    self.inversions.append(Violation(
+                        kind="inversion", site=site,
+                        message=f"acquired {identity} while holding {h}, "
+                                f"but {rev} acquired them in the opposite "
+                                f"order — two live schedules that can "
+                                f"deadlock against each other"))
+        held.append(identity)
+
+    def on_released(self, identity: str) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == identity:
+                del held[i]
+                return
+
+    def on_blocking(self, what: str, site: str) -> None:
+        held = self._held()
+        if not held:
+            return
+        with self._mu:
+            self.blocking.append(Violation(
+                kind="blocking", site=site,
+                message=f"{what} while holding "
+                        f"{', '.join(dict.fromkeys(held))}"))
+
+
+class SanitizedLock:
+    """Recording proxy around a raw lock.  ``reentrant`` holds by the same
+    thread are legal for RLocks and never witness a self-edge."""
+
+    def __init__(self, raw, identity: str, witness: Witness,
+                 reentrant: bool = False):
+        self._raw = raw
+        self.identity = identity
+        self._witness = witness
+        self._reentrant = reentrant
+
+    def _site(self, depth: int) -> str:
+        try:
+            f = sys._getframe(depth)
+            return f"{f.f_code.co_filename}:{f.f_lineno}"
+        except ValueError:          # pragma: no cover — shallow stack
+            return "<unknown>"
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._raw.acquire(blocking, timeout)
+        if got:
+            self._witness.on_acquired(self.identity, self._site(2))
+        return got
+
+    def release(self):
+        self._raw.release()
+        self._witness.on_released(self.identity)
+
+    def locked(self):
+        return self._raw.locked()
+
+    def __enter__(self):
+        got = self._raw.acquire()
+        if got:
+            self._witness.on_acquired(self.identity, self._site(2))
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def __repr__(self):
+        return f"<SanitizedLock {self.identity} of {self._raw!r}>"
+
+
+def wrap(raw, identity: str, witness: Witness,
+         reentrant: bool = False) -> SanitizedLock:
+    """Wrap an existing lock under an explicit identity (unit tests; the
+    installed factories use creation-site identities instead)."""
+    return SanitizedLock(raw, identity, witness, reentrant=reentrant)
+
+
+# -------------------------------------------------------------- install --
+
+class LockSanitizer:
+    """Patches the lock factories + blocking primitives, and owns the
+    witness.  ``include`` prefixes (root-relative) select whose lock
+    creations get wrapped — everything else (stdlib queue/condition
+    internals, third-party code) passes through untouched."""
+
+    def __init__(self, root: str,
+                 include: Tuple[str, ...] = ("src/repro/",)):
+        self.root = os.path.abspath(root)
+        self.include = include
+        self.identities = build_identity_map(self.root)
+        self.witness = Witness()
+        self.installed = False
+        self._saved: Dict[str, object] = {}
+
+    # ------------------------------------------------------- factories --
+
+    def _creator_site(self) -> Optional[Tuple[str, int]]:
+        """(relpath, lineno) of the repo frame creating a lock, or None
+        when the creator is outside the include set."""
+        f = sys._getframe(2)    # 0=_creator_site, 1=factory, 2=creator
+        fname = f.f_code.co_filename
+        if not fname.startswith(self.root + os.sep):
+            return None
+        rel = os.path.relpath(fname, self.root).replace(os.sep, "/")
+        if "/analysis/" in rel or not any(
+                rel.startswith(p) for p in self.include):
+            return None
+        return rel, f.f_lineno
+
+    def _identity_at(self, rel: str, line: int) -> str:
+        return self.identities.get((rel, line), f"{rel}:{line}")
+
+    def _make_factory(self, raw_factory, reentrant: bool):
+        def factory():
+            raw = raw_factory()
+            site = self._creator_site()
+            if site is None:
+                return raw
+            identity = self._identity_at(*site)
+            return SanitizedLock(raw, identity, self.witness,
+                                 reentrant=reentrant)
+        return factory
+
+    # -------------------------------------------------- blocking hooks --
+
+    def _blocking_wrapper(self, fn, what: str, self_method: bool):
+        witness = self.witness
+        root = self.root + os.sep
+
+        def wrapped(*args, **kwargs):
+            if getattr(witness._tls, "held", None):
+                f = sys._getframe(1)
+                fname = f.f_code.co_filename
+                if fname.startswith(root):
+                    rel = os.path.relpath(fname, self.root)
+                    witness.on_blocking(
+                        what, f"{rel.replace(os.sep, '/')}:{f.f_lineno}")
+            return fn(*args, **kwargs)
+        wrapped._sanitizer_raw = fn
+        return wrapped
+
+    # -------------------------------------------------------- lifecycle --
+
+    def install(self) -> "LockSanitizer":
+        if self.installed:
+            return self
+        self._saved = {
+            "Lock": threading.Lock, "RLock": threading.RLock,
+            "sleep": time.sleep, "Event.wait": threading.Event.wait,
+            "Thread.join": threading.Thread.join,
+        }
+        threading.Lock = self._make_factory(_RAW_LOCK, reentrant=False)
+        threading.RLock = self._make_factory(_RAW_RLOCK, reentrant=True)
+        time.sleep = self._blocking_wrapper(time.sleep, "time.sleep",
+                                            self_method=False)
+        threading.Event.wait = self._blocking_wrapper(
+            threading.Event.wait, "Event.wait", self_method=True)
+        threading.Thread.join = self._blocking_wrapper(
+            threading.Thread.join, "Thread.join", self_method=True)
+        try:
+            import concurrent.futures
+            self._saved["Future.result"] = \
+                concurrent.futures.Future.result
+            concurrent.futures.Future.result = self._blocking_wrapper(
+                concurrent.futures.Future.result, "Future.result",
+                self_method=True)
+        except ImportError:         # pragma: no cover
+            pass
+        self.installed = True
+        return self
+
+    def uninstall(self) -> None:
+        if not self.installed:
+            return
+        threading.Lock = self._saved["Lock"]
+        threading.RLock = self._saved["RLock"]
+        time.sleep = self._saved["sleep"]
+        threading.Event.wait = self._saved["Event.wait"]
+        threading.Thread.join = self._saved["Thread.join"]
+        if "Future.result" in self._saved:
+            import concurrent.futures
+            concurrent.futures.Future.result = \
+                self._saved["Future.result"]
+        self.installed = False
+
+
+# ---------------------------------------------------------- cross-check --
+
+@dataclasses.dataclass
+class CrossCheck:
+    confirmed: List[Tuple[Tuple[str, str], str]]    #: edge, dynamic site
+    stale: List[Tuple[Tuple[str, str], Tuple[str, int, str]]]
+    dynamic_only: List[Tuple[Tuple[str, str], str]]
+
+    def render(self) -> List[str]:
+        out = []
+        for (a, b), site in self.confirmed:
+            out.append(f"sanitizer: confirmed static edge {a} -> {b} "
+                       f"(witnessed at {site})")
+        for (a, b), (path, line, scope) in self.stale:
+            out.append(f"sanitizer: stale static edge {a} -> {b} "
+                       f"({path}:{line} [{scope}]) — never witnessed at "
+                       f"runtime: dead path or coverage hole")
+        for (a, b), site in self.dynamic_only:
+            out.append(f"sanitizer: dynamic-only edge {a} -> {b} "
+                       f"(witnessed at {site}, absent from the static "
+                       f"model)")
+        return out
+
+
+def cross_check(witness: Witness, root: str) -> CrossCheck:
+    """Join the witnessed graph against the static LOCK edge model."""
+    from repro.analysis.locks import static_edges
+    from repro.analysis.project import Project
+    static = static_edges(Project(root))
+    confirmed, stale = [], []
+    for edge, where in sorted(static.items()):
+        if edge in witness.edges:
+            confirmed.append((edge, witness.edges[edge]))
+        else:
+            stale.append((edge, where))
+    known = set(static)
+    dynamic_only = [(e, s) for e, s in sorted(witness.edges.items())
+                    if e not in known and ":" not in e[0]
+                    and ":" not in e[1]]
+    return CrossCheck(confirmed=confirmed, stale=stale,
+                      dynamic_only=dynamic_only)
+
+
+def baseline_allowed_paths(baseline_path: str) -> Set[str]:
+    """Paths with a LOCK001 baseline entry: intentional
+    blocking-under-lock the dynamic gate honors too (one suppression
+    model for both halves)."""
+    allowed: Set[str] = set()
+    try:
+        with open(baseline_path, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if line.startswith("LOCK001 ") and "::" in line:
+                    allowed.add(line.split()[1].partition("::")[0])
+    except OSError:
+        pass
+    return allowed
+
+
+# ------------------------------------------------------------ singleton --
+
+_ACTIVE: Optional[LockSanitizer] = None
+
+
+def active() -> Optional[LockSanitizer]:
+    return _ACTIVE
+
+
+def install_from_env(root: str) -> Optional[LockSanitizer]:
+    """Install iff ``REPRO_SANITIZE=1`` (idempotent); the root conftest
+    calls this at pytest startup, before repo modules are imported, so
+    module-level locks (telemetry's tracer ids, registries) are created
+    through the patched factories."""
+    global _ACTIVE
+    if os.environ.get(ENV_FLAG, "") != "1":
+        return None
+    if _ACTIVE is None:
+        _ACTIVE = LockSanitizer(root).install()
+    return _ACTIVE

@@ -1,0 +1,207 @@
+"""TRC — trace-context flow checker (interprocedural).
+
+The tracing fabric (PR 7) stitches one span tree across threads and
+processes, but only if every handover point actually carries the context:
+a thread spawned on the request path without ``activate()``/explicit
+``parent=`` starts a fresh orphan trace, and a wire frame without the
+trace field silently drops the tree at the process boundary.  Three
+rules:
+
+* **TRC001** — a ``threading.Thread(target=...)`` spawn in a method
+  reachable from a request entry point (``rank``/``rank_batch``/
+  ``get_scores``/``submit``/… of the same class) must hand the current
+  trace context over: either a spawn argument derives from
+  ``current_context()`` or the resolved target itself re-anchors via
+  ``activate(...)`` / ``current_context()`` / ``record(..., parent=...)``.
+  Background threads started from ``__init__``/``start``-style lifecycle
+  methods are exempt — they are not part of any request's tree.
+* **TRC002** — ``Tracer.record(...)`` calls must pass an explicit
+  ``parent=``: ``record`` exists precisely for cross-thread span
+  attribution, and without a parent it fabricates a root span that
+  detaches the subtree.
+* **TRC003** — a function that opens a client span (``with self._span``
+  / ``tracer.span(...) as sp``) and then calls a wire encoder that
+  accepts a ``trace`` parameter must bind it; otherwise the span is
+  opened locally but never crosses the wire (FLAG_TRACE never set) and
+  the server-side half of the tree is orphaned.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.base import Finding, call_name, walk_in_scope
+from repro.analysis.dataflow import (CallGraph, FuncInfo, Scanner, build,
+                                     each_class)
+from repro.analysis.project import Project
+
+#: Request-path entry points: what servers, pools, and plan stages invoke
+#: on a handler/transport per request (vs lifecycle methods).
+ENTRY_METHODS = {"rank", "rank_batch", "rank_many", "get_score",
+                 "get_scores", "get_score_batch", "submit", "submit_many",
+                 "_call", "run", "run_batch", "run_many"}
+
+_CTX_CALLS = ("current_context",)
+
+
+def _is_thread_spawn(call: ast.Call) -> bool:
+    name = call_name(call) or ""
+    return name.split(".")[-1] == "Thread"
+
+
+def _spawn_target(call: ast.Call) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "target":
+            return kw.value
+    if call.args:
+        return call.args[0]
+    return None
+
+
+def _mentions_context(node: ast.AST,
+                      ctx_locals: Set[str]) -> bool:
+    """Does this expression reference a captured trace context — either a
+    local assigned from ``current_context()`` or the call itself?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in ctx_locals:
+            return True
+        if isinstance(sub, ast.Call):
+            cn = (call_name(sub) or "").split(".")[-1]
+            if cn in _CTX_CALLS:
+                return True
+    return False
+
+
+def _context_locals(fn: ast.AST) -> Set[str]:
+    """Locals assigned (directly) from a ``...current_context()`` call."""
+    out: Set[str] = set()
+    for node in walk_in_scope(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call):
+            cn = (call_name(node.value) or "").split(".")[-1]
+            if cn in _CTX_CALLS:
+                out.add(node.targets[0].id)
+    return out
+
+
+def _target_reanchors(target_fn: ast.AST) -> bool:
+    """Does the spawned target's body re-anchor the trace itself?"""
+    for node in ast.walk(target_fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = (call_name(node) or "").split(".")[-1]
+        if name in ("activate",) or name in _CTX_CALLS:
+            return True
+        if name == "record" and any(k.arg == "parent"
+                                    for k in node.keywords):
+            return True
+    return False
+
+
+def _target_params_carry_ctx(call: ast.Call, scanner: Scanner,
+                             target_fn: Optional[ast.AST]) -> bool:
+    """Spawn-arg handover: any ``args=(...)``/``kwargs`` element (or the
+    whole call, for bound-method partials) mentioning a captured trace
+    context counts, as does a target whose body re-anchors."""
+    ctx_locals = _context_locals(scanner.info.fn)
+    for kw in call.keywords:
+        if kw.arg in ("args", "kwargs") and _mentions_context(
+                kw.value, ctx_locals):
+            return True
+    if target_fn is not None and _target_reanchors(target_fn):
+        return True
+    return False
+
+
+def _check_spawns(graph: CallGraph, findings: List[Finding]) -> None:
+    for cls in each_class(graph.project):
+        entries = [f"{cls.name}.{m}" for m in cls.methods
+                   if m in ENTRY_METHODS]
+        if not entries:
+            continue
+        reachable = graph.reachable(entries)
+        for ref in sorted(reachable):
+            info = graph.functions.get(ref)
+            if info is None or info.cls != cls.name:
+                continue
+            scanner = graph.scanner(info)
+            for node in walk_in_scope(info.fn):
+                if not (isinstance(node, ast.Call)
+                        and _is_thread_spawn(node)):
+                    continue
+                tgt_expr = _spawn_target(node)
+                tgt_info = (scanner.resolve_target(tgt_expr)
+                            if tgt_expr is not None else None)
+                tgt_fn = tgt_info.fn if tgt_info is not None else None
+                if _target_params_carry_ctx(node, scanner, tgt_fn):
+                    continue
+                findings.append(Finding(
+                    code="TRC001", path=info.module.path,
+                    line=node.lineno, scope=info.qualname,
+                    message="thread spawned on a request path without "
+                            "trace handover: capture current_context() "
+                            "and activate() it (or record(parent=...)) "
+                            "in the target, or the spawned work starts "
+                            "an orphan trace"))
+
+
+def _check_record_parents(graph: CallGraph,
+                          findings: List[Finding]) -> None:
+    for ref, info in sorted(graph.functions.items()):
+        scanner = None
+        for node in walk_in_scope(info.fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "record"):
+                continue
+            if scanner is None:
+                scanner = graph.scanner(info)
+            recv = scanner.receiver_type(node.func.value)
+            if recv != "Tracer":
+                continue
+            if any(k.arg == "parent" for k in node.keywords):
+                continue
+            findings.append(Finding(
+                code="TRC002", path=info.module.path, line=node.lineno,
+                scope=info.qualname,
+                message="Tracer.record(...) without parent=: records a "
+                        "detached root span — pass the captured request "
+                        "context explicitly"))
+
+
+def _opens_span(fn: ast.AST) -> bool:
+    for node in walk_in_scope(fn):
+        if isinstance(node, ast.withitem) \
+                and isinstance(node.context_expr, ast.Call) \
+                and isinstance(node.context_expr.func, ast.Attribute) \
+                and node.context_expr.func.attr in ("span", "_span"):
+            return True
+    return False
+
+
+def _check_wire_trace(graph: CallGraph, findings: List[Finding]) -> None:
+    for ref, info in sorted(graph.functions.items()):
+        if not _opens_span(info.fn):
+            continue
+        for site in graph.call_sites.get(ref, ()):
+            if "trace" not in site.callee.params:
+                continue
+            if site.has_splat or "trace" in site.bound:
+                continue
+            findings.append(Finding(
+                code="TRC003", path=info.module.path, line=site.line,
+                scope=info.qualname,
+                message=f"opens a span but calls {site.callee.ref} "
+                        f"(which accepts trace=) without binding it — "
+                        f"the span never crosses the wire (FLAG_TRACE "
+                        f"unset), orphaning the server-side subtree"))
+
+
+def check(project: Project) -> List[Finding]:
+    graph = build(project)
+    findings: List[Finding] = []
+    _check_spawns(graph, findings)
+    _check_record_parents(graph, findings)
+    _check_wire_trace(graph, findings)
+    return findings

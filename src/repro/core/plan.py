@@ -93,10 +93,19 @@ class _HandlerTransport:
     """Adapt any ``get_scores(pairs)`` handler (QuestionAnsweringHandler,
     ReplicaPool, ServingEngine) to the client's ``get_score_batch``."""
 
+    #: the plan threads request deadlines through this adapter; handlers
+    #: that opt in (ReplicaPool, ServingEngine) drop expired work at
+    #: their batcher dequeue exactly as they do behind a socket server.
+    supports_deadline = True
+
     def __init__(self, handler):
         self._handler = handler
 
-    def get_score_batch(self, pairs):
+    def get_score_batch(self, pairs, deadline_abs: Optional[float] = None):
+        if deadline_abs is not None and getattr(
+                self._handler, "supports_deadline", False):
+            return self._handler.get_scores(pairs,
+                                            deadline_abs=deadline_abs)
         return self._handler.get_scores(pairs)
 
 
@@ -320,14 +329,37 @@ class PlanContext:
         self._owned_clients.clear()
         self._transports.clear()
 
+    def __enter__(self) -> "PlanContext":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _deadline_kwargs(transport, deadline_abs: Optional[float]
+                     ) -> Dict[str, float]:
+    """The deadline keyword a transport understands, if any: transports
+    advertising ``supports_deadline`` (clients, pools, engines, hedged
+    wrappers) take the absolute deadline; everything else gets nothing
+    rather than an unexpected-keyword error."""
+    if deadline_abs is not None and getattr(transport,
+                                            "supports_deadline", False):
+        return {"deadline_abs": deadline_abs}
+    return {}
+
 
 def _chunked_remote_scores(transport, pairs: List[Tuple[str, str]],
-                           max_rpc_pairs: int) -> np.ndarray:
+                           max_rpc_pairs: int,
+                           deadline_abs: Optional[float] = None
+                           ) -> np.ndarray:
     """Score pairs over a transport in RPC-sized chunks (see
-    ``PlanContext.remote_chunk``)."""
+    ``PlanContext.remote_chunk``). The request deadline rides along on
+    every chunk so a late chunk sheds server-side instead of queueing."""
+    kw = _deadline_kwargs(transport, deadline_abs)
     out: List[float] = []
     for i in range(0, len(pairs), max_rpc_pairs):
-        out.extend(transport.get_score_batch(pairs[i:i + max_rpc_pairs]))
+        out.extend(transport.get_score_batch(pairs[i:i + max_rpc_pairs],
+                                             **kw))
     return np.asarray(out, np.float64)
 
 
@@ -353,23 +385,30 @@ class RemoteRerankStage(PL.Stage):
         self.k = k
         self.max_rpc_pairs = max_rpc_pairs
 
-    def _score(self, pairs: List[Tuple[str, str]]) -> np.ndarray:
+    def _score(self, pairs: List[Tuple[str, str]],
+               deadline_abs: Optional[float] = None) -> np.ndarray:
         return _chunked_remote_scores(self.transport, pairs,
-                                      self.max_rpc_pairs)
+                                      self.max_rpc_pairs,
+                                      deadline_abs=deadline_abs)
 
-    def run(self, query, candidates):
+    def run(self, query, candidates,
+            deadline_abs: Optional[float] = None):
         if not candidates:
             return []
         return _rank_by_scores(
-            candidates, self._score([(query, c.text) for c in candidates]),
+            candidates,
+            self._score([(query, c.text) for c in candidates],
+                        deadline_abs=deadline_abs),
             self.k)
 
-    def run_batch(self, queries, states):
+    def run_batch(self, queries, states,
+                  deadline_abs: Optional[float] = None):
         active = [i for i, c in enumerate(states or []) if c]
         pairs: List[Tuple[str, str]] = []
         for i in active:
             pairs.extend((queries[i], c.text) for c in states[i])
-        scores = self._score(pairs) if pairs else np.zeros((0,))
+        scores = (self._score(pairs, deadline_abs=deadline_abs)
+                  if pairs else np.zeros((0,)))
         outs: List[List[PL.Candidate]] = [[] for _ in queries]
         offset = 0
         for i in active:
@@ -626,10 +665,12 @@ class ExecutionPlan:
             return docs[doc_id][sent_id]
         return ""    # ranking against a corpus this context doesn't bind
 
-    def _run_remote_pipeline(self, queries: Sequence[str]):
+    def _run_remote_pipeline(self, queries: Sequence[str],
+                             deadline_abs: Optional[float] = None):
         from repro.serving import telemetry
         queries = list(queries)
         chunk = self.ctx.rank_chunk or len(queries) or 1
+        kw = _deadline_kwargs(self._ranker, deadline_abs)
         t0 = time.perf_counter()
         rankings: List = []
         # One span per ranking RPC chunk: the transport underneath (Client
@@ -639,7 +680,7 @@ class ExecutionPlan:
                                          queries=len(queries)):
             for i in range(0, len(queries), chunk):
                 rankings.extend(
-                    self._ranker.rank_batch(queries[i:i + chunk]))
+                    self._ranker.rank_batch(queries[i:i + chunk], **kw))
         if len(rankings) != len(queries):
             raise ValueError(f"ranking reply held {len(rankings)} rankings "
                              f"for {len(queries)} queries")
@@ -656,16 +697,33 @@ class ExecutionPlan:
                                                dt)]))
         return out
 
-    def run(self, query: str):
+    def _shed_if_expired(self, deadline_abs: Optional[float]) -> None:
+        """Drop work whose deadline already passed: the cascade below
+        would run entirely for an answer nobody is waiting for.  Raised
+        as a retriable ShedError exactly like the server-side sheds."""
+        if deadline_abs is None or time.perf_counter() < deadline_abs:
+            return
+        from repro.core.wire import ShedError
+        from repro.serving import telemetry
+        telemetry.get_registry().inc("plan_sheds_expired",
+                                     target=self.target)
+        raise ShedError("expired")
+
+    def run(self, query: str, deadline_abs: Optional[float] = None):
+        self._shed_if_expired(deadline_abs)
         if self.target == "remote_pipeline":
-            return self._run_remote_pipeline([query])[0]
+            return self._run_remote_pipeline(
+                [query], deadline_abs=deadline_abs)[0]
         if self.target == "batched":
             return self._bat.run(query)
         return self._seq.run(query)
 
-    def run_many(self, queries: Sequence[str]):
+    def run_many(self, queries: Sequence[str],
+                 deadline_abs: Optional[float] = None):
+        self._shed_if_expired(deadline_abs)
         if self.target == "remote_pipeline":
-            return self._run_remote_pipeline(queries)
+            return self._run_remote_pipeline(queries,
+                                             deadline_abs=deadline_abs)
         if self.target == "local":
             return [self._seq.run(q) for q in queries]
         return self._bat.run_batch(queries)
@@ -697,6 +755,12 @@ class ExecutionPlan:
         """Release the remote connections the plan's context opened. Plans
         sharing one context share its transports — close once, at the end."""
         self.ctx.close()
+
+    def __enter__(self) -> "ExecutionPlan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def plan(pipeline: ops.Op, target: str = "local",

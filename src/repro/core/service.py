@@ -427,6 +427,12 @@ class SimpleServer:
             self._thread.join(timeout=2.0)
         self._sock.close()
 
+    def __enter__(self) -> "SimpleServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
 
 class ThreadPoolServer:
     """TThreadPoolServer: fixed worker pool, one connection per worker.
@@ -538,6 +544,12 @@ class ThreadPoolServer:
                 conn.close()
         self._sock.close()
 
+    def __enter__(self) -> "ThreadPoolServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
 
 class Client:
     """Blocking single-connection client (the paper's single-thread client).
@@ -567,7 +579,17 @@ class Client:
     into the caller's trace. ``trace=False`` opts a client out (e.g. the
     fabric's control-plane probe connections, which would otherwise flood
     the span ring at probe frequency).
+
+    Data-plane methods take either deadline form: the wire-native
+    *relative* budget (``deadline_s``) or the serving stack's *absolute*
+    perf-counter deadline (``deadline_abs``, converted to the remaining
+    budget at send time) — so plan/engine code that threads one absolute
+    deadline end to end can hand it straight to a socket transport.
     """
+
+    #: plans thread absolute deadlines through this transport (see
+    #: ``_budget_s``); advertised the same way the in-process handlers do.
+    supports_deadline = True
 
     def __init__(self, address: Tuple[str, int], reconnect: bool = True,
                  retry_sheds: int = 0, backoff_s: float = 0.01,
@@ -587,6 +609,20 @@ class Client:
             return telemetry.NOOP_SPAN
         return telemetry.get_tracer().span(f"client.{method}",
                                            endpoint=self._endpoint)
+
+    @staticmethod
+    def _budget_s(deadline_s: Optional[float],
+                  deadline_abs: Optional[float]) -> Optional[float]:
+        """Collapse the two deadline forms to one relative send budget.
+        An absolute deadline (perf_counter clock) converts to what is
+        LEFT of it right now — clamped at 0 so an already-expired request
+        sheds at the server boundary instead of riding a negative budget
+        that decode would reject."""
+        if deadline_abs is not None:
+            remaining = max(deadline_abs - time.perf_counter(), 0.0)
+            return (remaining if deadline_s is None
+                    else min(deadline_s, remaining))
+        return deadline_s
 
     def _connect(self) -> socket.socket:
         sock = socket.create_connection(self.address)
@@ -631,6 +667,7 @@ class Client:
             if deadline_s is not None:
                 remaining = deadline_s - (time.perf_counter() - t0)
                 if remaining <= 0:
+                    telemetry.get_registry().inc("client_sheds_expired")
                     raise wire.ShedError(
                         f"{SHED_EXPIRED}: deadline budget "
                         f"{deadline_s * 1e3:.1f}ms spent during reconnect"
@@ -654,43 +691,51 @@ class Client:
                 telemetry.get_registry().inc("client_shed_retries")
 
     def get_score(self, question: str, answer: str,
-                  deadline_s: Optional[float] = None) -> float:
+                  deadline_s: Optional[float] = None,
+                  deadline_abs: Optional[float] = None) -> float:
+        budget = self._budget_s(deadline_s, deadline_abs)
         with self._span("get_score") as sp:
             return self._rpc_with_retry(
                 lambda b: wire.encode_get_score(question, answer, b,
                                                 trace=sp.context),
-                deadline_s)[0]
+                budget)[0]
 
     def get_score_batch(self, pairs: Sequence[Tuple[str, str]],
-                        deadline_s: Optional[float] = None):
+                        deadline_s: Optional[float] = None,
+                        deadline_abs: Optional[float] = None):
+        budget = self._budget_s(deadline_s, deadline_abs)
         with self._span("get_score_batch") as sp:
             return self._rpc_with_retry(
                 lambda b: wire.encode_get_score_batch(pairs, b,
                                                       trace=sp.context),
-                deadline_s)
+                budget)
 
-    def rank(self, query: str, deadline_s: Optional[float] = None
+    def rank(self, query: str, deadline_s: Optional[float] = None,
+             deadline_abs: Optional[float] = None
              ) -> List[wire.RankedItem]:
         """v3 whole-pipeline ranking: one query in, one ranked
         (doc_id, sent_id, score) list out."""
+        budget = self._budget_s(deadline_s, deadline_abs)
         with self._span("rank") as sp:
             out = self._rpc_with_retry(
                 lambda b: wire.encode_rank(query, b, trace=sp.context),
-                deadline_s, wire.decode_reply_ranking)
+                budget, wire.decode_reply_ranking)
         if not out:     # a misbehaving server must fail typed, not crash
             raise ValueError("ranking reply held no rankings for the query")
         return out[0]
 
     def rank_batch(self, queries: Sequence[str],
-                   deadline_s: Optional[float] = None
+                   deadline_s: Optional[float] = None,
+                   deadline_abs: Optional[float] = None
                    ) -> List[List[wire.RankedItem]]:
         """v3 whole-pipeline ranking for a query batch — ONE RPC for the
         whole batch instead of chunked per-pair scoring calls."""
+        budget = self._budget_s(deadline_s, deadline_abs)
         with self._span("rank_batch") as sp:
             return self._rpc_with_retry(
                 lambda b: wire.encode_rank_batch(queries, b,
                                                  trace=sp.context),
-                deadline_s, wire.decode_reply_ranking)
+                budget, wire.decode_reply_ranking)
 
     def health(self, deadline_s: Optional[float] = None
                ) -> Dict[str, float]:

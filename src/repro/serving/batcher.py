@@ -280,3 +280,9 @@ class MicroBatcher:
             if item is not None and not item.future.done():
                 item.future.set_exception(RuntimeError("MicroBatcher "
                                                        "stopped"))
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

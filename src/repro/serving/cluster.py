@@ -62,6 +62,15 @@ class Replica:
         s["draining"] = 1.0 if self.draining else 0.0
         return s
 
+    def stop(self):
+        self.batcher.stop()
+
+    def __enter__(self) -> "Replica":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
 
 class ReplicaPool:
     #: core.service passes the decoded wire deadline through ``get_scores``
@@ -173,6 +182,7 @@ class ReplicaPool:
         # Already expired on arrival: shed before paying featurization
         # (per-pair tokenize + overlap features hold the GIL).
         if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            telemetry.get_registry().inc("pool_sheds_expired")
             raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
         # The batcher items capture this span as their trace parent, so the
@@ -298,4 +308,10 @@ class ReplicaPool:
 
     def stop(self):
         for r in self.replicas:
-            r.batcher.stop()
+            r.stop()
+
+    def __enter__(self) -> "ReplicaPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -56,6 +56,7 @@ class ServingEngine:
         same way (shed before featurization if already expired, dropped at
         the batcher dequeue if it expires while queued)."""
         if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            telemetry.get_registry().inc("engine_sheds_expired")
             raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
         fut = self.batcher.submit(*self._featurize(question, answer),
@@ -73,6 +74,7 @@ class ServingEngine:
             return np.zeros((0,), np.float32)
         # Already expired on arrival: shed before paying featurization.
         if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            telemetry.get_registry().inc("engine_sheds_expired")
             raise ShedError(SHED_EXPIRED)
         t0 = time.perf_counter()
         tracer = telemetry.get_tracer()
@@ -102,6 +104,12 @@ class ServingEngine:
 
     def stop(self):
         self.batcher.stop()
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 class PipelineEngine:
@@ -150,9 +158,9 @@ class PipelineEngine:
         #: rerank-free pipeline still counts each query).
         self.rows_per_query = max(candidate_bound(pipeline, ctx) or 1, 1)
 
-    def rank(self, query: str):
+    def rank(self, query: str, deadline_abs: Optional[float] = None):
         t0 = time.perf_counter()
-        out = self.plan.run(query)
+        out = self.plan.run(query, deadline_abs=deadline_abs)
         dt = time.perf_counter() - t0
         self.tracker.observe(dt)
         registry = telemetry.get_registry()
@@ -161,13 +169,14 @@ class PipelineEngine:
                          model_version=self.model_version)
         return out
 
-    def rank_many(self, queries: Sequence[str]):
+    def rank_many(self, queries: Sequence[str],
+                  deadline_abs: Optional[float] = None):
         t0 = time.perf_counter()
         version = self.model_version  # one label per call, even mid-swap
         with telemetry.get_tracer().span("engine.rank_many",
                                          queries=len(queries),
                                          model_version=version):
-            out = self.plan.run_many(queries)
+            out = self.plan.run_many(queries, deadline_abs=deadline_abs)
         dt = time.perf_counter() - t0
         self.tracker.observe(dt, n=max(len(queries), 1))
         registry = telemetry.get_registry()
@@ -223,8 +232,13 @@ class PipelineEngine:
         if not queries:
             return []
         if deadline_abs is not None and time.perf_counter() >= deadline_abs:
+            telemetry.get_registry().inc("engine_sheds_expired",
+                                         model_version=self.model_version)
             raise ShedError(SHED_EXPIRED)
-        results = self.rank_many(list(queries))
+        # The deadline keeps flowing: the plan threads it into every
+        # remote stage so expired work is dropped downstream too (the
+        # arrival check above alone would let queued work outlive it).
+        results = self.rank_many(list(queries), deadline_abs=deadline_abs)
         return [[(c.doc_id, c.sent_id, c.score) for c in cands]
                 for cands, _trace in results]
 

@@ -181,6 +181,12 @@ class FabricWorker:
         except subprocess.TimeoutExpired:
             self.proc.kill()
             self.proc.wait(timeout_s)
+        # The reader thread drains the pipe to EOF once the process dies;
+        # join it so a terminated worker leaves no thread behind (and the
+        # tail it captured is complete before anyone reads it).
+        if self._reader is not None:
+            self._reader.join(timeout=timeout_s)
+            self._reader = None
 
 
 class WorkerEndpoint:
@@ -228,6 +234,12 @@ class WorkerEndpoint:
                 c.close()
             except OSError:
                 pass
+
+    def __enter__(self) -> "WorkerEndpoint":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class HealthRouter(HedgedTransport):

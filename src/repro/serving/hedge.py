@@ -211,3 +211,9 @@ class HedgedTransport:
                         close()
                     except OSError:
                         pass
+
+    def __enter__(self) -> "HedgedTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

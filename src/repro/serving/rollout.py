@@ -254,13 +254,23 @@ class ShadowEngine:
         return self.primary.swap_version(version)
 
     def _shadow_one(self, queries: List[str],
-                    primary_rankings: List[List[Tuple]]) -> None:
+                    primary_rankings: List[List[Tuple]],
+                    parent_ctx=None) -> None:
         version = str(getattr(self.candidate, "model_version",
                               "candidate"))
         metrics = telemetry.get_registry()
+        tracer = telemetry.get_tracer()
         try:
-            t0 = time.perf_counter()
-            shadow = self.candidate.rank_batch(queries)
+            # Re-anchor this worker thread under the serving request's span
+            # (thread-local span stacks don't cross threads on their own),
+            # so shadow scoring shows up inside the request trace instead
+            # of as a parentless root.
+            with tracer.activate(parent_ctx):
+                with tracer.span("shadow.rank_batch",
+                                 queries=len(queries),
+                                 model_version=version):
+                    t0 = time.perf_counter()
+                    shadow = self.candidate.rank_batch(queries)
             dt_ms = (time.perf_counter() - t0) * 1e3
             metrics.inc("shadow_queries", float(len(queries)),
                         model_version=version)
@@ -292,10 +302,15 @@ class ShadowEngine:
             telemetry.get_registry().inc("shadow_dropped",
                                          float(len(sampled_idx)))
             return
+        # Capture the caller's span context BEFORE spawning: the shadow
+        # thread has its own (empty) span stack, so without an explicit
+        # handover its spans would detach from the request trace.
+        parent_ctx = telemetry.get_tracer().current_context()
         threading.Thread(
             target=self._shadow_one,
             args=([queries[i] for i in sampled_idx],
-                  [rankings[i] for i in sampled_idx]),
+                  [rankings[i] for i in sampled_idx],
+                  parent_ctx),
             daemon=True).start()
 
     def rank(self, query: str):

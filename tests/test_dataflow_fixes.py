@@ -1,0 +1,285 @@
+"""Regression tests for the defects the interprocedural dataflow lints
+(DL/TRC/RES — see ``repro.analysis``) surfaced across the serving stack.
+
+Each test fails on the pre-fix code:
+
+* before ``PipelineEngine.rank_batch`` threaded ``deadline_abs`` into
+  ``rank_many`` the deadline died at the arrival check (DL002);
+* before ``ExecutionPlan.run``/``run_many`` shed expired work the plan ran
+  the whole cascade for an answer nobody waited for;
+* shed raises on the engine/pool/client paths were invisible in MSG_STATS
+  (DL003);
+* ``ShadowEngine``'s mirror thread recorded parentless root spans
+  (TRC001);
+* ``Replica`` never stopped its batcher, ``FabricWorker.terminate`` left
+  its pipe-reader thread behind (RES002), and half the long-lived classes
+  couldn't be used as context managers (RES003).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import service as SV
+from repro.core import wire
+from repro.data.tokenizer import HashingTokenizer
+from repro.serving import telemetry
+from repro.serving.batcher import MicroBatcher
+from repro.serving.cluster import Replica, ReplicaPool
+from repro.serving.fabric import FabricWorker
+from repro.serving.hedge import HedgedTransport
+from repro.serving.rollout import ShadowEngine
+
+
+def _stub_scorer(q_tok, a_tok, feats):
+    return np.full((q_tok.shape[0],), 0.5, np.float32)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_telemetry():
+    telemetry.reset_all()
+    yield
+    telemetry.reset_all()
+
+
+# ------------------------------------------------- deadline propagation --
+
+class _RecordingTransport:
+    """remote_pipeline ranker stub that records the kwargs it was called
+    with — deadline-aware (``supports_deadline``) or deadline-blind."""
+
+    def __init__(self, deadline_aware: bool):
+        if deadline_aware:
+            self.supports_deadline = True
+        self.calls = []
+
+    def rank_batch(self, queries, deadline_abs=None):
+        self.calls.append(deadline_abs)
+        return [[(0, 0, 0.5)] for _ in queries]
+
+
+def _stub_engine(plan_stub):
+    """A PipelineEngine wired by hand around a plan stub (skipping the
+    expensive planner/scorer construction the real __init__ does)."""
+    from repro.serving.engine import PipelineEngine
+    from repro.serving.stats import LatencyTracker
+    eng = PipelineEngine.__new__(PipelineEngine)
+    eng.plan = plan_stub
+    eng.tracker = LatencyTracker()
+    eng.model_version = "test"
+    eng.swaps = 0
+    eng.rows_per_query = 1
+    return eng
+
+
+class _PlanStub:
+    def __init__(self):
+        self.run_many_deadlines = []
+
+    def run_many(self, queries, deadline_abs=None):
+        self.run_many_deadlines.append(deadline_abs)
+        return [([], []) for _ in queries]
+
+
+def test_engine_rank_batch_threads_deadline_into_plan():
+    """DL002 fix: the deadline must keep flowing past the arrival check —
+    otherwise work queued behind the entry point outlives its budget."""
+    stub = _PlanStub()
+    eng = _stub_engine(stub)
+    t = time.perf_counter() + 60.0
+    eng.rank_batch(["q1", "q2"], deadline_abs=t)
+    assert stub.run_many_deadlines == [t]
+
+
+def test_engine_rank_batch_sheds_expired_and_counts():
+    stub = _PlanStub()
+    eng = _stub_engine(stub)
+    with pytest.raises(wire.ShedError, match="expired"):
+        eng.rank_batch(["q"], deadline_abs=time.perf_counter() - 1.0)
+    assert stub.run_many_deadlines == []        # cascade never ran
+    snap = telemetry.get_registry().snapshot()
+    assert snap.get("engine_sheds_expired{model_version=test}") == 1.0
+
+
+def test_remote_pipeline_plan_passes_deadline_to_capable_transport():
+    """DL001 fix: a remote_pipeline plan hands its deadline to a transport
+    that advertises ``supports_deadline`` — and keeps a deadline-blind
+    transport's call signature untouched."""
+    from repro.core.plan import _deadline_kwargs
+    aware = _RecordingTransport(deadline_aware=True)
+    blind = _RecordingTransport(deadline_aware=False)
+    t = time.perf_counter() + 60.0
+    assert _deadline_kwargs(aware, t) == {"deadline_abs": t}
+    assert _deadline_kwargs(blind, t) == {}
+
+
+def test_plan_run_sheds_expired_before_any_stage(monkeypatch):
+    from repro.core.plan import ExecutionPlan
+    pl = ExecutionPlan.__new__(ExecutionPlan)
+    pl.target = "local"
+    with pytest.raises(wire.ShedError, match="expired"):
+        pl.run("q", deadline_abs=time.perf_counter() - 1.0)
+    with pytest.raises(wire.ShedError, match="expired"):
+        pl.run_many(["q"], deadline_abs=time.perf_counter() - 1.0)
+    snap = telemetry.get_registry().snapshot()
+    assert snap.get("plan_sheds_expired{target=local}") == 2.0
+
+
+def test_client_budget_converts_absolute_deadline_to_remaining():
+    now = time.perf_counter()
+    b = SV.Client._budget_s(None, now + 10.0)
+    assert 9.0 < b <= 10.0
+    # expired absolute deadline -> zero budget, not negative
+    assert SV.Client._budget_s(None, now - 5.0) == 0.0
+    # both given: the tighter one wins
+    assert SV.Client._budget_s(0.5, now + 10.0) == pytest.approx(0.5)
+    tight = SV.Client._budget_s(60.0, now + 1.0)
+    assert tight <= 1.0
+    assert SV.Client._budget_s(2.5, None) == 2.5
+    assert SV.Client._budget_s(None, None) is None
+
+
+def test_client_accepts_absolute_deadline_end_to_end():
+    """The plan/engine layers thread ONE absolute deadline; the client must
+    accept it directly and convert to the wire's relative budget."""
+    tok = HashingTokenizer(512)
+    pool = ReplicaPool([_stub_scorer], tok, idf={}, max_len=8)
+    srv = SV.SimpleServer(pool).start_background()
+    try:
+        with SV.Client(srv.address) as cl:
+            with pytest.raises(wire.ShedError, match="expired"):
+                cl.get_score("q", "a",
+                             deadline_abs=time.perf_counter() - 1.0)
+            out = cl.get_score("q", "a",
+                               deadline_abs=time.perf_counter() + 60.0)
+            assert out == pytest.approx(0.5)
+            assert cl.rank_batch is not None    # same kwarg on rank paths
+    finally:
+        srv.stop()
+        pool.stop()
+
+
+def test_pool_shed_is_counted():
+    """DL003 fix: every shed decision increments a metric, so overload is
+    visible in MSG_STATS instead of silent."""
+    tok = HashingTokenizer(512)
+    with ReplicaPool([_stub_scorer], tok, idf={}, max_len=8) as pool:
+        with pytest.raises(wire.ShedError):
+            pool.get_scores([("q", "a")],
+                            deadline_abs=time.perf_counter() - 1.0)
+    snap = telemetry.get_registry().snapshot()
+    assert snap.get("pool_sheds_expired") == 1.0
+
+
+# ------------------------------------------------- shadow trace handover --
+
+class _RankStub:
+    model_version = "stub"
+
+    def __init__(self):
+        self.batches = []
+
+    def rank_batch(self, queries, deadline_abs=None):
+        self.batches.append(list(queries))
+        return [[(0, 0, 1.0)] for _ in queries]
+
+    def rank(self, query):
+        return self.rank_batch([query])[0]
+
+    def stats(self):
+        return {}
+
+
+def test_shadow_thread_parents_into_request_trace():
+    """TRC001 fix: the mirror thread adopts the caller's span context, so
+    shadow scoring lands inside the request trace instead of starting a
+    parentless root."""
+    shadow = ShadowEngine(_RankStub(), _RankStub(), fraction=1.0,
+                          max_pending=4)
+    tracer = telemetry.get_tracer()
+    with tracer.span("request") as req:
+        shadow.rank_batch(["query one"])
+        assert shadow.drain(timeout_s=5.0)
+    spans = {s.name: s for s in tracer.finished()}
+    assert "shadow.rank_batch" in spans
+    sh = spans["shadow.rank_batch"]
+    assert sh.trace_id == req.context.trace_id
+    assert sh.parent_id == req.context.span_id
+
+
+# ------------------------------------------------- resource lifecycles --
+
+def test_replica_stop_stops_its_batcher():
+    rep = Replica(_stub_scorer, "r0", max_batch=4, max_wait_s=0.001)
+    worker = rep.batcher._thread
+    with rep:
+        assert worker.is_alive()
+    assert not worker.is_alive()
+
+
+def test_pool_context_manager_stops_every_replica():
+    tok = HashingTokenizer(512)
+    with ReplicaPool([_stub_scorer, _stub_scorer], tok, idf={},
+                     max_len=8) as pool:
+        threads = [r.batcher._thread for r in pool.replicas]
+        assert all(t.is_alive() for t in threads)
+    assert not any(t.is_alive() for t in threads)
+
+
+def test_servers_and_batcher_are_context_managers():
+    with MicroBatcher(_stub_scorer, max_batch=4, max_wait_s=0.001) as mb:
+        worker = mb._thread
+        assert worker.is_alive()
+    assert not worker.is_alive()
+
+    tok = HashingTokenizer(512)
+    pool = ReplicaPool([_stub_scorer], tok, idf={}, max_len=8)
+    with SV.SimpleServer(pool).start_background() as srv:
+        address = srv.address
+        with SV.Client(address) as cl:
+            assert cl.get_score("q", "a") == pytest.approx(0.5)
+    with SV.ThreadPoolServer(pool, num_workers=2).start_background() as srv:
+        with SV.Client(srv.address) as cl:
+            assert cl.get_score("q", "a") == pytest.approx(0.5)
+    pool.stop()
+
+
+def test_hedged_transport_context_manager_closes_endpoints():
+    class _Endpoint:
+        def __init__(self):
+            self.closed = False
+
+        def get_score_batch(self, pairs, deadline_s=None):
+            return [0.5] * len(pairs)
+
+        def close(self):
+            self.closed = True
+
+    eps = [_Endpoint(), _Endpoint()]
+    with HedgedTransport(eps, hedge_s=10.0):
+        pass
+    assert all(e.closed for e in eps)
+
+
+def test_fabric_worker_terminate_joins_reader_thread():
+    """RES002 fix: a deliberate terminate must also reap the pipe-reader
+    thread — a respawning fleet would otherwise accrete one dangling
+    thread per generation."""
+    import sys
+
+    class _TinyWorker(FabricWorker):
+        def command(self):
+            return [sys.executable, "-u", "-c",
+                    "import time; print('FABRIC_READY 127.0.0.1 1', "
+                    "flush=True); time.sleep(60)"]
+
+    w = _TinyWorker(slot=0)
+    w.spawn()
+    assert w.wait_ready(timeout_s=30.0) == ("127.0.0.1", 1)
+    reader = w._reader
+    assert reader is not None and reader.is_alive()
+    w.terminate(timeout_s=10.0)
+    assert not reader.is_alive()
+    assert w._reader is None
+    assert not w.alive

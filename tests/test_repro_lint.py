@@ -406,6 +406,429 @@ def test_baseline_rejects_reasonless_entries(tmp_path):
         Baseline.load(str(p))
 
 
+# ------------------------------------------------ DL deadline dataflow --
+
+_DL_PROPAGATION = """
+    class Engine:
+        def _score(self, pairs, deadline_abs=None):
+            return [0.0 for _ in pairs]
+
+        def bad(self, pairs, deadline_abs=None):
+            return self._score(pairs)
+
+        def good(self, pairs, deadline_abs=None):
+            return self._score(pairs, deadline_abs=deadline_abs)
+
+        def rebound(self, pairs, deadline_abs=None):
+            return self._score(pairs, deadline_abs=None)
+    """
+
+
+def test_dl001_dropped_deadline_at_call_site(tmp_path):
+    res = lint(tmp_path, {"engine.py": _DL_PROPAGATION}, checks=["DL"])
+    assert codes(res) == ["DL001"]
+    (f,) = res.findings
+    assert f.scope == "Engine.bad"
+    assert "Engine._score" in f.message
+    # good binds it through; rebound binds it to something else on
+    # purpose — both stay silent.
+
+
+def test_dl001_splat_calls_are_unknown_not_missing(tmp_path):
+    src = """
+    class Engine:
+        def _score(self, pairs, deadline_abs=None):
+            return pairs
+
+        def forward(self, pairs, deadline_abs=None, **kw):
+            return self._score(pairs, **kw)
+    """
+    res = lint(tmp_path, {"engine.py": src}, checks=["DL"])
+    assert codes(res) == []
+
+
+_DL_CONTRACT = """
+    import time
+
+    class ArrivalOnly:
+        supports_deadline = True
+
+        def rank_batch(self, queries, deadline_abs=None):
+            if deadline_abs is not None \\
+                    and time.perf_counter() > deadline_abs:
+                raise ValueError("late")
+            return list(queries)
+    """
+
+
+def test_dl002_arrival_check_only_contract(tmp_path):
+    res = lint(tmp_path, {"srv.py": _DL_CONTRACT}, checks=["DL"])
+    assert codes(res) == ["DL002"]
+    (f,) = res.findings
+    assert f.scope == "ArrivalOnly.rank_batch"
+    assert "supports_deadline" in f.message
+
+
+def test_dl002_clean_when_deadline_flows_into_a_call(tmp_path):
+    src = """
+    import time
+
+    class FlowsThrough:
+        supports_deadline = True
+
+        def _run(self, queries, deadline_abs=None):
+            return list(queries)
+
+        def rank_batch(self, queries, deadline_abs=None):
+            return self._run(queries, deadline_abs=deadline_abs)
+
+    class DerivedBudget:
+        supports_deadline = True
+
+        def _run(self, queries, budget):
+            return list(queries)
+
+        def rank_batch(self, queries, deadline_abs=None):
+            budget = max(deadline_abs - time.perf_counter(), 0.0)
+            return self._run(queries, budget)
+    """
+    # Flowing inside an argument *expression* (the Client._budget_s
+    # pattern) counts as propagation, not as a bare comparison.
+    res = lint(tmp_path, {"srv.py": src}, checks=["DL"])
+    assert codes(res) == []
+
+
+def test_dl003_uncounted_shed(tmp_path):
+    src = """
+    class ShedError(Exception):
+        pass
+
+    class Gate:
+        def __init__(self, registry):
+            self._registry = registry
+
+        def bad_admit(self, n):
+            if n > 8:
+                raise ShedError("queue full")
+            return n
+
+        def miscounted(self, n):
+            if n > 8:
+                self._registry.inc("requests_total")
+                raise ShedError("queue full")
+            return n
+
+        def good_admit(self, n):
+            if n > 8:
+                self._registry.inc("admission_sheds_expired")
+                raise ShedError("queue full")
+            return n
+    """
+    res = lint(tmp_path, {"gate.py": src}, checks=["DL"])
+    assert codes(res) == ["DL003", "DL003"]
+    assert {f.scope for f in res.findings} == {"Gate.bad_admit",
+                                               "Gate.miscounted"}
+    # miscounted fires too: incrementing an unrelated metric does not
+    # make the shed visible in MSG_STATS.
+
+
+# --------------------------------------------------- TRC trace dataflow --
+
+_TRC_SPAWN = """
+    import threading
+
+    class Mirror:
+        def __init__(self, tracer):
+            self._tracer = tracer
+
+        def rank_batch(self, queries):
+            t = threading.Thread(target=self._shadow, args=(queries,))
+            t.start()
+            return list(queries)
+
+        def _shadow(self, queries):
+            return len(queries)
+    """
+
+
+def test_trc001_orphan_thread_on_request_path(tmp_path):
+    res = lint(tmp_path, {"mirror.py": _TRC_SPAWN}, checks=["TRC"])
+    assert codes(res) == ["TRC001"]
+    (f,) = res.findings
+    assert f.scope == "Mirror.rank_batch"
+    assert "orphan trace" in f.message
+
+
+def test_trc001_clean_on_both_handover_styles(tmp_path):
+    src = """
+    import threading
+
+    class ArgHandover:
+        def __init__(self, tracer):
+            self._tracer = tracer
+
+        def rank_batch(self, queries):
+            ctx = self._tracer.current_context()
+            threading.Thread(target=self._shadow,
+                             args=(queries, ctx)).start()
+            return list(queries)
+
+        def _shadow(self, queries, ctx):
+            return len(queries)
+
+    class ReanchorHandover:
+        def __init__(self, tracer):
+            self._tracer = tracer
+
+        def rank_batch(self, queries):
+            threading.Thread(target=self._shadow,
+                             args=(queries,)).start()
+            return list(queries)
+
+        def _shadow(self, queries):
+            with self._tracer.activate(None):
+                return len(queries)
+    """
+    # Either the spawn args carry a captured context or the resolved
+    # target re-anchors itself — both count as a handover.
+    res = lint(tmp_path, {"mirror.py": src}, checks=["TRC"])
+    assert codes(res) == []
+
+
+def test_trc001_lifecycle_threads_are_exempt(tmp_path):
+    src = """
+    import threading
+
+    class Prober:
+        def start(self):
+            self._t = threading.Thread(target=self._loop, daemon=True)
+            self._t.start()
+
+        def _loop(self):
+            pass
+
+        def join(self):
+            self._t.join()
+    """
+    # No request entry method -> the spawn is background lifecycle, not
+    # part of any request's span tree.
+    res = lint(tmp_path, {"probe.py": src}, checks=["TRC"])
+    assert codes(res) == []
+
+
+def test_trc002_record_without_parent(tmp_path):
+    src = """
+    class Tracer:
+        def record(self, name, t0, t1, parent=None):
+            return name
+
+    class Plan:
+        def __init__(self, sink):
+            self._tracer = Tracer()
+            self._sink = sink
+
+        def bad(self, t0, t1):
+            self._tracer.record("stage", t0, t1)
+
+        def good(self, t0, t1, ctx):
+            self._tracer.record("stage", t0, t1, parent=ctx)
+
+        def unrelated(self, row):
+            self._sink.record(row)
+    """
+    res = lint(tmp_path, {"plan.py": src}, checks=["TRC"])
+    assert codes(res) == ["TRC002"]
+    (f,) = res.findings
+    assert f.scope == "Plan.bad"
+    # unrelated: the receiver is not typed as a Tracer -> silent.
+
+
+def test_trc003_span_opened_but_trace_never_crosses_the_wire(tmp_path):
+    src = """
+    def encode_request(payload, trace=None):
+        return payload
+
+    class Transport:
+        def __init__(self, tracer):
+            self._tracer = tracer
+
+        def bad(self, payload):
+            with self._tracer.span("rpc"):
+                return encode_request(payload)
+
+        def good(self, payload, ctx):
+            with self._tracer.span("rpc"):
+                return encode_request(payload, trace=ctx)
+
+        def no_span(self, payload):
+            return encode_request(payload)
+    """
+    res = lint(tmp_path, {"transport.py": src}, checks=["TRC"])
+    assert codes(res) == ["TRC003"]
+    (f,) = res.findings
+    assert f.scope == "Transport.bad"
+    assert "trace=" in f.message
+
+
+# ----------------------------------------------- RES resource lifecycle --
+
+def test_res001_leaked_local_acquisitions(tmp_path):
+    src = """
+    import shutil
+    import socket
+    import tempfile
+
+    def bad_scratch():
+        scratch = tempfile.mkdtemp(prefix="pub-")
+        return 0
+
+    def bad_probe(host):
+        s = socket.create_connection((host, 80), timeout=1.0)
+        return True
+
+    def good_finally():
+        scratch = tempfile.mkdtemp(prefix="pub-")
+        try:
+            return 0
+        finally:
+            shutil.rmtree(scratch)
+
+    def good_with(host):
+        s = socket.create_connection((host, 80), timeout=1.0)
+        with s:
+            return True
+
+    def good_escape():
+        return_value = tempfile.mkdtemp(prefix="pub-")
+        return return_value
+    """
+    res = lint(tmp_path, {"reg.py": src}, checks=["RES"])
+    assert codes(res) == ["RES001", "RES001"]
+    assert {f.scope for f in res.findings} == {"bad_scratch", "bad_probe"}
+
+
+def test_res002_class_owned_thread_never_released(tmp_path):
+    src = """
+    import threading
+
+    class Leaky:
+        def __init__(self):
+            self._t = threading.Thread(target=self._loop, daemon=True)
+            self._t.start()
+
+        def _loop(self):
+            pass
+
+    class Joined:
+        def __init__(self):
+            self._t = threading.Thread(target=self._loop, daemon=True)
+            self._t.start()
+
+        def _loop(self):
+            pass
+
+        def shutdown(self):
+            self._t.join()
+
+    class Fleet:
+        def __init__(self, n):
+            self._threads = [threading.Thread(target=self._loop)
+                             for _ in range(n)]
+
+        def _loop(self):
+            pass
+
+        def shutdown(self):
+            for t in self._threads:
+                t.join()
+    """
+    res = lint(tmp_path, {"pool.py": src}, checks=["RES"])
+    assert codes(res) == ["RES002"]
+    (f,) = res.findings
+    assert f.scope == "Leaky" and "self._t" in f.message
+    # Joined releases directly; Fleet releases by iterating the owning
+    # list attribute — both silent.
+
+
+def test_res003_lifecycle_class_without_context_manager(tmp_path):
+    src = """
+    class NoWith:
+        def close(self):
+            pass
+
+    class WithCM:
+        def close(self):
+            pass
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            self.close()
+
+    class Inherits(WithCM):
+        def close(self):
+            pass
+
+    class ExternalBase(SomeLibHandle):
+        def close(self):
+            pass
+    """
+    # Inherits gets __enter__/__exit__ from a resolvable base; a class
+    # with an unresolvable external base stays silent (it may inherit a
+    # CM we cannot see).
+    res = lint(tmp_path, {"handles.py": src}, checks=["RES"])
+    assert codes(res) == ["RES003"]
+    (f,) = res.findings
+    assert f.scope == "NoWith" and "__enter__" in f.message
+
+
+# ------------------------------------------------------- runner v2 modes --
+
+def test_parallel_jobs_match_serial_findings(tmp_path):
+    files = {"worker.py": _SLEEPY, "engine.py": _DL_PROPAGATION,
+             "mirror.py": _TRC_SPAWN}
+    serial = lint(tmp_path, files)
+    threaded = runner.run(str(tmp_path), jobs=0)
+    assert [f.render() for f in serial.findings] \
+        == [f.render() for f in threaded.findings]
+    assert serial.findings            # the comparison is not vacuous
+
+
+def test_changed_only_scopes_findings_to_the_diff(tmp_path):
+    import subprocess
+
+    def git(*args):
+        subprocess.run(["git", "-C", str(tmp_path), "-c",
+                        "user.email=t@t", "-c", "user.name=t", *args],
+                       check=True, capture_output=True)
+
+    (tmp_path / "committed.py").write_text(textwrap.dedent(_SLEEPY))
+    git("init", "-q")
+    git("add", "committed.py")
+    git("commit", "-qm", "seed")
+    (tmp_path / "untracked.py").write_text(textwrap.dedent(_TRC_SPAWN))
+
+    full = runner.run(str(tmp_path))
+    assert sorted(f.code for f in full.findings) == ["LOCK001", "TRC001"]
+    scoped = runner.run(str(tmp_path), changed_only=True)
+    assert [f.code for f in scoped.findings] == ["TRC001"]
+    assert [f.path for f in scoped.findings] == ["untracked.py"]
+
+
+def test_strict_stale_fails_only_full_runs(tmp_path):
+    (tmp_path / "mod.py").write_text("X = 1\n")
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("LOCK001 gone.py::Gone.bad -- code was deleted\n")
+    args = ["--root", str(tmp_path), "--baseline", str(bl)]
+    assert runner.main(args) == 0                       # warning only
+    assert runner.main(args + ["--strict-stale"]) == 1  # tier-1 mode
+    # A subset run cannot judge the whole baseline, so stale entries do
+    # not fail it even under --strict-stale.
+    assert runner.main(args + ["--strict-stale",
+                               "--checks", "LOCK"]) == 0
+
+
 # ------------------------------------------------------------ the gate --
 
 def test_repository_lints_clean_under_checked_in_baseline():

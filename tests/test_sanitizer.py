@@ -1,0 +1,144 @@
+"""Fast tier-1 smoke for the runtime lock sanitizer (no env var needed —
+exercises the machinery directly; the slow soak in
+``test_sanitize_soak.py`` runs the real serving stack under it)."""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.analysis import sanitizer
+from repro.analysis.sanitizer import (LockSanitizer, SanitizedLock,
+                                      Witness, build_identity_map,
+                                      baseline_allowed_paths, wrap)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------- wrapper fidelity --
+
+def test_wrapped_lock_behaves_like_a_lock():
+    w = Witness()
+    lk = wrap(threading.Lock(), "T.a", w)
+    assert not lk.locked()
+    with lk:
+        assert lk.locked()
+        assert not lk.acquire(blocking=False)   # held: non-blocking fails
+    assert not lk.locked()
+    assert lk.acquire(timeout=1.0)
+    lk.release()
+    assert w.acquisitions == 2
+    assert w.held_now() == []
+
+
+def test_ordered_acquisitions_witness_edges_without_violations():
+    w = Witness()
+    a = wrap(threading.Lock(), "T.a", w)
+    b = wrap(threading.Lock(), "T.b", w)
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert ("T.a", "T.b") in w.edges
+    assert w.inversions == []
+    assert w.blocking == []
+
+
+def test_reversed_order_is_a_dynamic_inversion():
+    w = Witness()
+    a = wrap(threading.Lock(), "T.a", w)
+    b = wrap(threading.Lock(), "T.b", w)
+    with a:
+        with b:
+            pass
+    with b:
+        with a:                                 # reversal: deadlock schedule
+            pass
+    assert len(w.inversions) == 1
+    v = w.inversions[0]
+    assert v.kind == "inversion"
+    assert "T.a" in v.message and "T.b" in v.message
+
+
+def test_rlock_reentry_is_not_a_self_edge():
+    w = Witness()
+    r = wrap(threading.RLock(), "T.r", w, reentrant=True)
+    with r:
+        with r:
+            assert w.held_now() == ["T.r", "T.r"]
+    assert w.held_now() == []
+    assert all(x != y for (x, y) in w.edges)
+    assert w.inversions == []
+
+
+# --------------------------------------------------------- identity map --
+
+def test_identity_map_covers_repo_lock_attributes():
+    idmap = build_identity_map(ROOT)
+    names = set(idmap.values())
+    assert "ReplicaPool._lock" in names
+    assert "HedgedTransport._locks[]" in names      # lock-list form
+    assert "_Ids._lock" in names                    # telemetry id counter
+    # every key is (repo-relative path, positive line)
+    assert all(p.startswith("src/repro/") and ln > 0
+               for p, ln in idmap)
+
+
+def test_baseline_allowed_paths_picks_lock001_files():
+    allowed = baseline_allowed_paths(
+        os.path.join(ROOT, "scripts", "lint_baseline.txt"))
+    assert "src/repro/serving/hedge.py" in allowed
+    # DL003 entries must NOT grant dynamic blocking amnesty
+    assert "src/repro/core/wire.py" not in allowed
+
+
+# ------------------------------------------------------ install/uninstall --
+
+def test_install_wraps_repo_created_locks_and_restores_cleanly():
+    """Locks created from an included path get proxies; stdlib/other
+    creations pass through; uninstall restores the raw factories."""
+    raw_factory = threading.Lock
+    san = LockSanitizer(ROOT, include=("tests/",))
+    san.install()
+    try:
+        lk = threading.Lock()                   # creator: this test file
+        assert isinstance(lk, SanitizedLock)
+        assert lk.identity.startswith("tests/test_sanitizer.py:")
+        with lk:
+            time.sleep(0)                       # blocking under lock
+        assert san.witness.acquisitions == 1
+        assert len(san.witness.blocking) == 1
+        assert "time.sleep" in san.witness.blocking[0].message
+        # a lock created by non-included code stays raw
+        import queue
+        q = queue.Queue()
+        assert not isinstance(q.mutex, SanitizedLock)
+    finally:
+        san.uninstall()
+    assert threading.Lock is raw_factory
+    assert not isinstance(threading.Lock(), SanitizedLock)
+
+
+def test_install_from_env_is_a_noop_without_the_flag(monkeypatch):
+    monkeypatch.delenv(sanitizer.ENV_FLAG, raising=False)
+    assert sanitizer.install_from_env(ROOT) is None
+    assert not isinstance(threading.Lock(), SanitizedLock)
+
+
+# ---------------------------------------------------------- cross-check --
+
+def test_cross_check_confirms_and_flags_stale_edges():
+    w = Witness()
+    # Witness the hedge -> telemetry-ids edge by hand: the soak drives it
+    # through the real stack; here we only test the join logic.
+    a = wrap(threading.Lock(), "HedgedTransport._locks[]", w)
+    b = wrap(threading.Lock(), "_Ids._lock", w)
+    with a:
+        with b:
+            pass
+    xc = sanitizer.cross_check(w, ROOT)
+    confirmed = {edge for edge, _ in xc.confirmed}
+    assert ("HedgedTransport._locks[]", "_Ids._lock") in confirmed
+    stale = {edge for edge, _ in xc.stale}
+    assert ("MetricsRegistry._lock", "Tracer._lock") in stale
+    assert any("stale static edge" in line for line in xc.render())
